@@ -1,0 +1,35 @@
+"""Shared benchmark utilities. All timings block_until_ready; output rows
+follow the ``name,us_per_call,derived`` CSV contract of run.py."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+ROWS: list[tuple[str, float, str]] = []
+
+
+def timeit(fn, *args, warmup: int = 1, repeats: int = 3) -> float:
+    """Best-of wall time in seconds (post-compile)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def emit(name: str, seconds_per_call: float, derived: str = ""):
+    ROWS.append((name, seconds_per_call * 1e6, derived))
+    print(f"{name},{seconds_per_call * 1e6:.1f},{derived}")
+
+
+def flush_rows():
+    out = list(ROWS)
+    ROWS.clear()
+    return out

@@ -1,0 +1,38 @@
+"""Fig. 7 + Fig. 8: search time and Step-2 candidate count vs AABB width.
+
+The TPU analogue of AABB width is the candidate-window width in cells
+(DESIGN.md section 2). Fig. 8's IS-call count is exactly our per-query
+candidate count (deterministic, hardware-independent); Fig. 7's time curve
+is the window search timed per window radius.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import build_cell_grid, choose_grid_spec
+from repro.core.grid import box_count, clamp_box
+from repro.core.search import window_search
+from repro.data.pointclouds import uniform_cloud
+from .common import emit, timeit
+
+
+def run(n_points=60_000, n_queries=8_192, k=8, cell=0.02):
+    pts = uniform_cloud(n_points, seed=1)
+    qs = uniform_cloud(n_queries, seed=2)
+    spec = choose_grid_spec(pts, radius=cell, cell_size=cell)
+    grid = build_cell_grid(jnp.asarray(pts), spec)
+    qj = jnp.asarray(qs)
+    ccoord = spec.cell_of(qj)
+
+    for w in (1, 2, 3, 4, 6):
+        width = (2 * w + 1) * cell
+        radius = width / 2  # search radius implied by this window
+        t = timeit(
+            lambda: window_search(grid, jnp.asarray(pts), qj, spec, w,
+                                  radius, k, False, 256))
+        lo, hi = clamp_box(spec, ccoord, w)
+        cand = int(jnp.sum(box_count(grid.sat, lo, hi)))
+        emit(f"fig07/search_w{w}", t / n_queries,
+             f"aabb_width={width:.3f}")
+        emit(f"fig08/is_calls_w{w}", 0.0,
+             f"candidates_per_query={cand / n_queries:.1f}")

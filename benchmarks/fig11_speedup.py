@@ -1,0 +1,45 @@
+"""Fig. 11: RTNN speedup over baselines, per input.
+
+Baselines implemented in this repo (the paper's GPU libraries are not
+portable here; these match their algorithmic classes):
+  * brute        — exhaustive tiled distance scan (cuNSearch/FRNN class:
+                   grid-free exhaustive work, hardware-friendly)
+  * noopt        — the RT formulation with no optimizations (FastRNN class)
+RTNN = scheduling + partitioning + bundling (full paper pipeline).
+Speedups are per-dataset, mirroring the KITTI / scan / N-body regimes.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import NeighborSearch, SearchOpts, SearchParams
+from repro.data.pointclouds import dataset_by_name
+from repro.kernels.ref import brute_force_search
+from .common import emit, timeit
+
+
+def run(k=8):
+    cases = [
+        ("kitti-40k", "kitti", 40_000, 5_000, 0.02),
+        ("scan-30k", "scan", 30_000, 5_000, 0.03),
+        ("nbody-30k", "nbody", 30_000, 5_000, 0.03),
+    ]
+    for name, kind, n, nq, r in cases:
+        pts = dataset_by_name(kind, n, seed=1)
+        qs = dataset_by_name(kind, nq, seed=2)
+        params = SearchParams(radius=r, k=k)
+
+        t_brute = timeit(
+            lambda: brute_force_search(jnp.asarray(pts), jnp.asarray(qs),
+                                       r, k), warmup=1, repeats=2)
+        ns_noopt = NeighborSearch(pts, params, SearchOpts(
+            schedule=False, partition=False, bundle=False))
+        t_noopt = timeit(lambda: ns_noopt.query(qs), warmup=1, repeats=2)
+        ns_full = NeighborSearch(pts, params, SearchOpts())
+        t_full = timeit(lambda: ns_full.query(qs), warmup=1, repeats=2)
+
+        emit(f"fig11/{name}/brute", t_brute / nq, "")
+        emit(f"fig11/{name}/noopt", t_noopt / nq,
+             f"speedup_vs_brute={t_brute / t_noopt:.1f}x")
+        emit(f"fig11/{name}/rtnn", t_full / nq,
+             f"speedup_vs_brute={t_brute / t_full:.1f}x;"
+             f"speedup_vs_noopt={t_noopt / t_full:.2f}x")

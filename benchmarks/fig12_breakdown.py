@@ -1,0 +1,45 @@
+"""Fig. 12: execution-time breakdown (Data/Opt/BVH/FS/Search categories).
+
+Data-transfer (Data) is host->device copy of points+queries; BVH is the
+grid build; Opt is scheduling+partitioning+bundling planning; FS (the
+paper's first-hit ray pass) is closed-form on the grid, so it is part of
+Opt here and reported as 0 (documented adaptation, DESIGN.md section 2).
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import NeighborSearch, SearchOpts, SearchParams
+from repro.core.grid import build_cell_grid
+from repro.data.pointclouds import dataset_by_name
+from .common import emit
+
+
+def run(k=8):
+    for name, kind, n, nq, r in [("kitti-40k", "kitti", 40_000, 6_000,
+                                  0.02),
+                                 ("nbody-30k", "nbody", 30_000, 6_000,
+                                  0.03)]:
+        pts = dataset_by_name(kind, n, seed=1)
+        qs = dataset_by_name(kind, nq, seed=2)
+
+        t0 = time.perf_counter()
+        pj = jax.block_until_ready(jnp.asarray(pts))
+        qj = jax.block_until_ready(jnp.asarray(qs))
+        t_data = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        ns = NeighborSearch(pts, SearchParams(radius=r, k=k), SearchOpts())
+        jax.block_until_ready(ns.grid.dense)
+        t_build = time.perf_counter() - t0
+
+        ns.query(qs)                      # warm/compile
+        ns.query(qs)
+        rep = ns.report
+        total = t_data + t_build + rep.t_opt + rep.t_search
+        for cat, t in [("Data", t_data), ("BVH", t_build),
+                       ("Opt", rep.t_opt), ("FS", 0.0),
+                       ("Search", rep.t_search)]:
+            emit(f"fig12/{name}/{cat}", t / nq,
+                 f"frac={t / total * 100:.1f}%")

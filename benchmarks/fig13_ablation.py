@@ -1,0 +1,40 @@
+"""Fig. 13: optimization ablation — NoOpt / +Sched / +Partition / +Bundle /
+Oracle, on a KITTI-like and an N-body-like input (the paper's two
+representative regimes; partitioning over-fragments on N-body)."""
+import numpy as np
+
+from repro.core import NeighborSearch, SearchOpts, SearchParams
+from repro.data.pointclouds import dataset_by_name
+from .common import emit, timeit
+
+
+VARIANTS = [
+    ("noopt", SearchOpts(schedule=False, partition=False, bundle=False)),
+    ("sched", SearchOpts(schedule=True, partition=False, bundle=False)),
+    ("sched+part", SearchOpts(schedule=True, partition=True, bundle=False)),
+    ("sched+part+bundle", SearchOpts(schedule=True, partition=True,
+                                     bundle=True)),
+]
+
+
+def run(k=8):
+    for name, kind, n, nq, r in [("kitti-40k", "kitti", 40_000, 6_000,
+                                  0.03),
+                                 ("nbody-30k", "nbody", 30_000, 6_000,
+                                  0.03)]:
+        pts = dataset_by_name(kind, n, seed=1)
+        qs = dataset_by_name(kind, nq, seed=2)
+        params = SearchParams(radius=r, k=k)
+        times = {}
+        for vname, opts in VARIANTS:
+            ns = NeighborSearch(pts, params, opts)
+            times[vname] = timeit(lambda: ns.query(qs), warmup=1, repeats=2)
+        base = times["noopt"]
+        # Oracle: best of (all variants) — a-priori knowledge of whether to
+        # partition, matching the paper's definition
+        oracle = min(times.values())
+        for vname, t in times.items():
+            emit(f"fig13/{name}/{vname}", t / nq,
+                 f"speedup_vs_noopt={base / t:.2f}x")
+        emit(f"fig13/{name}/oracle", oracle / nq,
+             f"speedup_vs_noopt={base / oracle:.2f}x")

@@ -1,0 +1,33 @@
+"""Fig. 14: range-search speedup sensitivity to r and K (Buddha-like
+uniform scan data in a unit cube, as in the paper)."""
+import jax.numpy as jnp
+
+from repro.core import NeighborSearch, SearchOpts, SearchParams
+from repro.data.pointclouds import uniform_cloud
+from repro.kernels.ref import brute_force_search
+from .common import emit, timeit
+
+
+def run():
+    pts = uniform_cloud(30_000, seed=1)
+    qs = uniform_cloud(4_000, seed=2)
+
+    for r in (0.01, 0.03, 0.1, 0.2):
+        k = 16
+        t_b = timeit(lambda: brute_force_search(
+            jnp.asarray(pts), jnp.asarray(qs), r, k), warmup=1, repeats=2)
+        ns = NeighborSearch(pts, SearchParams(radius=r, k=k, mode="range"),
+                            SearchOpts())
+        t_r = timeit(lambda: ns.query(qs), warmup=1, repeats=2)
+        emit(f"fig14/r{r}", t_r / len(qs),
+             f"speedup_vs_brute={t_b / t_r:.1f}x")
+
+    for k in (1, 8, 32, 64):
+        r = 0.05
+        t_b = timeit(lambda: brute_force_search(
+            jnp.asarray(pts), jnp.asarray(qs), r, k), warmup=1, repeats=2)
+        ns = NeighborSearch(pts, SearchParams(radius=r, k=k, mode="range"),
+                            SearchOpts())
+        t_r = timeit(lambda: ns.query(qs), warmup=1, repeats=2)
+        emit(f"fig14/K{k}", t_r / len(qs),
+             f"speedup_vs_brute={t_b / t_r:.1f}x")

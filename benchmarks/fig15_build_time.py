@@ -1,0 +1,30 @@
+"""Fig. 15: structure-build time is linear in the number of points
+(the paper regresses BVH build vs AABB count, R^2 = 0.996; we regress the
+grid build the same way)."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import build_cell_grid, choose_grid_spec
+from repro.data.pointclouds import uniform_cloud
+from .common import emit, timeit
+
+
+def run():
+    ns = [20_000, 40_000, 80_000, 160_000]
+    ts = []
+    for n in ns:
+        pts = uniform_cloud(n, seed=1)
+        spec = choose_grid_spec(pts, radius=0.02, cell_size=0.02)
+        pj = jnp.asarray(pts)
+        t = timeit(lambda: build_cell_grid(pj, spec))
+        ts.append(t)
+        emit(f"fig15/build_n{n}", t / n, "")
+    # linear fit R^2
+    x = np.asarray(ns, float)
+    y = np.asarray(ts, float)
+    coef = np.polyfit(x, y, 1)
+    pred = np.polyval(coef, x)
+    ss_res = np.sum((y - pred) ** 2)
+    ss_tot = np.sum((y - y.mean()) ** 2)
+    r2 = 1 - ss_res / max(ss_tot, 1e-30)
+    emit("fig15/linear_fit", 0.0, f"R2={r2:.4f};k1={coef[0]:.3e}s_per_pt")

@@ -1,0 +1,37 @@
+"""RTNN-core hillclimb harness (EXPERIMENTS.md section Perf, the cell most
+representative of the paper's own technique — measured live on this
+backend, unlike the dry-run cells).
+
+A/B variants, selected by env before process start:
+  REPRO_SELECTION=sort|topk      candidate selection algorithm
+and the paper's own ablation axes (schedule/partition/bundle) for context.
+
+  PYTHONPATH=src REPRO_SELECTION=sort  python -m benchmarks.perf_search_hillclimb
+  PYTHONPATH=src REPRO_SELECTION=topk  python -m benchmarks.perf_search_hillclimb
+"""
+import os
+
+import numpy as np
+
+from repro.core import NeighborSearch, SearchOpts, SearchParams
+from repro.data.pointclouds import kitti_like_cloud, uniform_cloud
+from .common import emit, timeit
+
+
+def run():
+    sel = os.environ.get("REPRO_SELECTION", "topk")
+    for name, maker, n, nq, r, k in [
+        ("kitti", kitti_like_cloud, 40_000, 10_000, 0.02, 8),
+        ("scan", uniform_cloud, 30_000, 10_000, 0.03, 16),
+    ]:
+        pts = maker(n, seed=1)
+        qs = maker(nq, seed=2)
+        ns = NeighborSearch(pts, SearchParams(radius=r, k=k), SearchOpts())
+        t = timeit(lambda: ns.query(qs), warmup=1, repeats=3)
+        emit(f"perf/{name}/selection={sel}", t / nq,
+             f"total={t:.2f}s;partitions={ns.report.num_partitions}")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

@@ -1,0 +1,43 @@
+"""Roofline table from the dry-run JSONs (deliverable g).
+
+Reads experiments/dryrun/*.json and prints the per-(mesh x arch x shape)
+three-term roofline + dominant bottleneck + MODEL_FLOPS ratio. Also used by
+EXPERIMENTS.md generation (scripts write the section from this table).
+"""
+import glob
+import json
+import os
+
+from .common import emit
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load_records():
+    recs = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def run():
+    recs = load_records()
+    ok = [r for r in recs if r.get("status") == "ok"]
+    skipped = [r for r in recs if r.get("status") == "skipped"]
+    for r in sorted(ok, key=lambda r: (r["mesh"], r["arch"], r["shape"])):
+        t = r["roofline"]
+        emit(
+            f"roofline/{r['mesh']}/{r['arch']}/{r['shape']}",
+            max(t["compute_s"], t["memory_s"], t["collective_s"]),
+            f"dominant={t['dominant']};compute={t['compute_s']:.3g}s;"
+            f"memory={t['memory_s']:.3g}s;coll={t['collective_s']:.3g}s;"
+            f"useful={t['useful_flops_ratio']:.2f}")
+    emit("roofline/summary", 0.0,
+         f"ok={len(ok)};skipped={len(skipped)};"
+         f"errors={len(recs) - len(ok) - len(skipped)}")
+
+
+if __name__ == "__main__":
+    run()

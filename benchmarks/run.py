@@ -1,0 +1,34 @@
+"""Benchmark driver: one module per paper figure/table (DESIGN.md section 5
+index) + the dry-run roofline table. Prints ``name,us_per_call,derived``
+CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run            # all
+  PYTHONPATH=src python -m benchmarks.run fig11      # one figure
+"""
+import sys
+import time
+
+
+def main() -> None:
+    from . import (fig05_coherence, fig07_aabb_width, fig11_speedup,
+                   fig12_breakdown, fig13_ablation, fig14_sensitivity,
+                   fig15_build_time, fig16_partition_dist, roofline)
+    modules = {
+        "fig05": fig05_coherence, "fig07": fig07_aabb_width,
+        "fig11": fig11_speedup, "fig12": fig12_breakdown,
+        "fig13": fig13_ablation, "fig14": fig14_sensitivity,
+        "fig15": fig15_build_time, "fig16": fig16_partition_dist,
+        "roofline": roofline,
+    }
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for key, mod in modules.items():
+        if only and not key.startswith(only):
+            continue
+        t0 = time.time()
+        mod.run()
+        print(f"# {key} done in {time.time() - t0:.1f}s")
+
+
+if __name__ == '__main__':
+    main()

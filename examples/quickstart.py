@@ -1,0 +1,30 @@
+"""Quickstart: RTNN-style neighbor search in three lines.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import NeighborSearch, SearchOpts, SearchParams
+
+rng = np.random.default_rng(0)
+points = rng.random((50_000, 3)).astype(np.float32)   # your point cloud
+queries = rng.random((5_000, 3)).astype(np.float32)   # where to search
+
+# K-nearest-neighbor search, bounded by a radius (the paper's unified
+# (r, K) interface, section 2.1)
+searcher = NeighborSearch(points, SearchParams(radius=0.05, k=8))
+result = searcher.query(queries)
+
+print("indices   ", result.indices.shape, "(-1 padded)")
+print("distances2", result.distances2.shape, "(inf padded)")
+print("counts    ", np.asarray(result.counts)[:10])
+print(f"partitions={searcher.report.num_partitions} "
+      f"bundles={len(searcher.report.bundles)} "
+      f"t_opt={searcher.report.t_opt * 1e3:.1f}ms "
+      f"t_search={searcher.report.t_search * 1e3:.1f}ms")
+
+# fixed-radius ("range") search with the same structure: first-K within r
+range_result = NeighborSearch(
+    points, SearchParams(radius=0.05, k=16, mode="range"),
+    SearchOpts(bundle=True)).query(queries)
+print("range counts", np.asarray(range_result.counts)[:10])

@@ -1,0 +1,88 @@
+"""End-to-end driver: a minimal SPH-style fluid step loop built on the
+neighbor-search core — the application class (SPlisHSPlasH / cuNSearch)
+the paper's range search serves.
+
+Each step: (1) rebuild the structure over moved particles, (2) range
+search around every particle, (3) density + pressure-force kernel sums
+over the returned neighbor lists, (4) symplectic Euler integration.
+
+  PYTHONPATH=src python examples/sph_fluid.py --particles 8000 --steps 5
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import NeighborSearch, SearchOpts, SearchParams
+
+H = 0.06            # smoothing radius
+K_MAX = 32          # bounded neighbor count (the paper's K)
+REST_DENSITY = 600.0
+STIFFNESS = 200.0
+DT = 4e-4
+GRAVITY = jnp.asarray([0.0, 0.0, -9.8])
+
+
+@jax.jit
+def sph_forces(pos, vel, nbr_idx, nbr_d2):
+    """Poly6 density + spiky pressure-gradient forces over the fixed-K
+    neighbor lists returned by the search."""
+    valid = nbr_idx >= 0
+    safe = jnp.clip(nbr_idx, 0)
+    d2 = jnp.where(valid, nbr_d2, H * H)
+    w = jnp.maximum(H * H - d2, 0.0) ** 3                    # poly6 core
+    density = jnp.sum(jnp.where(valid, w, 0.0), axis=1) * 315.0 / (
+        64.0 * jnp.pi * H**9) + 1e-6
+    pressure = STIFFNESS * jnp.maximum(density - REST_DENSITY, 0.0)
+
+    d = jnp.sqrt(jnp.maximum(d2, 1e-12))
+    dirs = (pos[:, None, :] - pos[safe]) / d[..., None]
+    spiky = (H - d) ** 2 * 45.0 / (jnp.pi * H**6)
+    p_i = pressure[:, None]
+    p_j = pressure[safe]
+    rho_j = density[safe]
+    f = dirs * (spiky * (p_i + p_j) / (2.0 * rho_j))[..., None]
+    f = jnp.sum(jnp.where(valid[..., None], f, 0.0), axis=1)
+    return f / density[:, None] + GRAVITY, density
+
+
+def step(pos, vel):
+    ns = NeighborSearch(np.asarray(pos),
+                        SearchParams(radius=H, k=K_MAX, mode="range"),
+                        SearchOpts())
+    res = ns.query(np.asarray(pos))
+    acc, density = sph_forces(jnp.asarray(pos), vel, res.indices,
+                              res.distances2)
+    vel = vel + DT * acc
+    pos = pos + DT * vel
+    # keep particles in the box (reflective walls)
+    pos = jnp.clip(pos, 0.0, 1.0)
+    vel = jnp.where((pos <= 0.0) | (pos >= 1.0), -0.5 * vel, vel)
+    return pos, vel, float(density.mean()), ns
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--particles", type=int, default=8000)
+    ap.add_argument("--steps", type=int, default=5)
+    args = ap.parse_args()
+
+    rng = np.random.default_rng(0)
+    pos = jnp.asarray(rng.random((args.particles, 3), np.float32) *
+                      [0.4, 0.4, 0.8])          # dam-break column
+    vel = jnp.zeros_like(pos)
+    for s in range(args.steps):
+        t0 = time.perf_counter()
+        pos, vel, rho, ns = step(pos, vel)
+        dt = time.perf_counter() - t0
+        print(f"step {s}: mean_density={rho:9.1f} "
+              f"partitions={ns.report.num_partitions} "
+              f"wall={dt:.2f}s")
+    assert np.isfinite(np.asarray(pos)).all()
+    print("ok")
+
+
+if __name__ == "__main__":
+    main()

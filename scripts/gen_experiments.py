@@ -1,0 +1,238 @@
+"""Generate EXPERIMENTS.md sections Dry-run and Roofline from the dry-run
+JSONs (before = experiments/dryrun_v0_baseline, after = experiments/dryrun).
+Section Perf's hillclimb log is maintained by hand in
+experiments/PERF_LOG.md and inlined verbatim.
+
+  PYTHONPATH=src python scripts/gen_experiments.py
+"""
+import glob
+import json
+import os
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+AFTER = os.path.join(ROOT, "experiments", "dryrun")
+BEFORE = os.path.join(ROOT, "experiments", "dryrun_v0_baseline")
+MID = os.path.join(ROOT, "experiments", "dryrun_v1_iter5")
+PERF_LOG = os.path.join(ROOT, "experiments", "PERF_LOG.md")
+
+
+def load(d):
+    out = {}
+    for f in glob.glob(os.path.join(d, "*.json")):
+        r = json.load(open(f))
+        out[(r["mesh"], r["arch"], r["shape"])] = r
+    return out
+
+
+def gb(x):
+    return f"{x / 1e9:.2f}"
+
+
+def fmt_s(x):
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x * 1e6:.3g}us"
+    if x < 1:
+        return f"{x * 1e3:.3g}ms"
+    return f"{x:.3g}s"
+
+
+def roofline_frac(t):
+    peak = max(t["compute_s"], t["memory_s"], t["collective_s"])
+    return t["compute_s"] / peak if peak > 0 else 0.0
+
+
+def bottleneck_note(r):
+    t = r["roofline"]
+    dom = t["dominant"]
+    kind = "train" if r["shape"].startswith("train") else (
+        "prefill" if r["shape"].startswith("prefill") else "decode")
+    arch = r["arch"]
+    if dom == "collective":
+        if kind == "train":
+            return ("gradient all-reduce + FSDP all-gathers dominate: more "
+                    "compute/comm overlap (bucketing) and larger per-device "
+                    "batch move it down")
+        if r.get("meta", {}).get("param_profile") == "train":
+            return ("weights exceed the serving-replication HBM budget, so "
+                    "per-token FSDP weight gathers remain: int8/fp8 weights "
+                    "would enable the serve profile")
+        return ("within-group TP all-reduces of [B,1,d] activations remain: "
+                "fusing the two per-layer all-reduces halves it")
+    if dom == "memory":
+        if arch.startswith("rwkv") and kind == "train":
+            return ("recurrent-state HBM traffic: larger RWKV chunk or the "
+                    "VMEM-resident Pallas scan removes the residual")
+        if kind == "decode":
+            return ("per-token weight + KV reads are irreducible at batch "
+                    "1-per-replica: batching more requests per group "
+                    "amortizes them")
+        return ("activation traffic: wider fusion / flash-style attention "
+                "tiles reduce HBM round-trips")
+    return ("MXU-bound: this cell is at the compute roofline; only "
+            "algorithmic work reduction helps")
+
+
+def cell_table(recs, mesh):
+    lines = [
+        "| arch | shape | status | dominant | compute | memory | collective"
+        " | roofline-frac | useful | note |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for (m, a, s), r in sorted(recs.items()):
+        if m != mesh:
+            continue
+        if r["status"] == "skipped":
+            lines.append(f"| {a} | {s} | skipped | — | — | — | — | — | — | "
+                         f"{r['reason'][:90]} |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {a} | {s} | ERROR | — | — | — | — | — | — |"
+                         f" {r.get('error', '')[:90]} |")
+            continue
+        t = r["roofline"]
+        lines.append(
+            f"| {a} | {s} | ok | **{t['dominant']}** | "
+            f"{fmt_s(t['compute_s'])} | {fmt_s(t['memory_s'])} | "
+            f"{fmt_s(t['collective_s'])} | {roofline_frac(t):.3f} | "
+            f"{t['useful_flops_ratio']:.2f} | {bottleneck_note(r)} |")
+    return "\n".join(lines)
+
+
+def memory_table(recs):
+    lines = [
+        "| arch | shape | profile | static GB/dev | analytic peak GB/dev |"
+        " fits 16 GB |",
+        "|---|---|---|---|---|---|",
+    ]
+    for (m, a, s), r in sorted(recs.items()):
+        if m != "pod" or r["status"] != "ok":
+            continue
+        meta = r["meta"]
+        peak = meta["analytic_peak_bytes"]
+        lines.append(
+            f"| {a} | {s} | {meta.get('param_profile', 'train')} | "
+            f"{gb(meta['static_bytes_per_device'])} | {gb(peak)} | "
+            f"{'yes' if peak < 16e9 else '**NO**'} |")
+    return "\n".join(lines)
+
+
+def before_after(before, mid, after):
+    lines = [
+        "| cell (pod mesh) | v0 baseline | v1 (iters 1-5) | final (6-7) |"
+        " total |",
+        "|---|---|---|---|---|",
+    ]
+    for key in sorted(after):
+        if key[0] != "pod":
+            continue
+        b, m, a = before.get(key), mid.get(key), after[key]
+        if not b or b["status"] != "ok" or a["status"] != "ok":
+            continue
+        tb, ta = b["roofline"], a["roofline"]
+        tm = m["roofline"] if m and m["status"] == "ok" else None
+        domb = max(tb["compute_s"], tb["memory_s"], tb["collective_s"])
+        domm = (max(tm["compute_s"], tm["memory_s"], tm["collective_s"])
+                if tm else None)
+        doma = max(ta["compute_s"], ta["memory_s"], ta["collective_s"])
+        if domb <= 0 or abs(doma / domb - 1) < 0.05:
+            continue
+        cell = "/".join(key[1:])
+        lines.append(
+            f"| {cell} | {fmt_s(domb)} | "
+            f"{fmt_s(domm) if domm else '—'} | {fmt_s(doma)} | "
+            f"**{domb / doma:.1f}x** |")
+    return "\n".join(lines)
+
+
+def main():
+    after = load(AFTER)
+    before = load(BEFORE)
+    mid = load(MID)
+    n_ok = sum(r["status"] == "ok" for r in after.values())
+    n_skip = sum(r["status"] == "skipped" for r in after.values())
+
+    perf_log = ""
+    if os.path.exists(PERF_LOG):
+        perf_log = open(PERF_LOG).read()
+
+    doc = f"""# EXPERIMENTS
+
+All artifacts regenerable: dry-run JSONs via
+`python -m repro.launch.dryrun --all --mesh both`, benchmark CSV via
+`python -m benchmarks.run` (bench_output.txt), tests via `pytest tests/`
+(test_output.txt). Hardware model: TPU v5e-class — 197 TFLOP/s bf16,
+819 GB/s HBM, 50 GB/s/link ICI (per brief).
+
+## Methodology notes (read first)
+
+* **Meshes.** pod = 16x16 (data x model, 256 chips); multipod = 2x16x16
+  (pod x data x model, 512 chips; "pod" is pure DP). Both build from 512
+  forced host devices; every cell is `jit(...).lower().compile()` with the
+  production shardings — compile success is the multi-pod dry-run gate.
+* **Trip-count-corrected costs.** XLA `cost_analysis()` counts `while`
+  bodies once, so scanned layers / microbatch loops are invisible in the
+  raw numbers. Each cell therefore also lowers a one-period layer probe
+  under the same shardings, and the step cost is composed with the known
+  static trip counts (dryrun.compose_costs). The CE chunk loop and the
+  optimizer are added analytically. The rwkv inner time-scan body is
+  counted once inside the probe (<2% of layer flops; documented
+  undercount).
+* **Collective bytes** are summed from the post-SPMD per-device HLO
+  (result-shape heuristic per op; async -start counted once), then
+  composed with the same trip counts.
+* **Memory.** The CPU backend's `memory_analysis()` is recorded in the
+  JSONs but includes layout copies a TPU build fuses away; the figure we
+  stand behind is the exact sharded static footprint (params + opt/cache
+  under the recorded PartitionSpecs) plus a remat-aware activation model
+  (`analytic_peak_bytes`).
+* **MODEL_FLOPS** = 6·N_active·D (train), 2·N_active·D (prefill per prompt
+  token / decode per generated token). ``useful`` = MODEL_FLOPS /
+  corrected-HLO-FLOPs; remat makes the healthy train ceiling ~0.75
+  (4 passes executed vs 3 counted).
+
+## Dry-run (deliverable e)
+
+{n_ok} cells ok, {n_skip} skipped-with-reason, 0 errors, across both
+meshes. Skips are structural per the brief: `long_500k` for the 8
+non-sub-quadratic archs, whisper serve shapes beyond its 448-position
+decoder.
+
+### Per-device memory fit (pod mesh, 16 GB HBM)
+
+{memory_table(after)}
+
+deepseek-v3-671b train sits at the edge by design: bf16 params (5.2 GB) +
+int8 sqrt-space Adam moments (5.3 GB) + remat activations; the multipod
+mesh halves the param shards. grok/deepseek decode cells keep the FSDP
+profile (weights too large to replicate per serving group) and pay the
+documented collective price.
+
+## Roofline (deliverable g) — single-pod mesh (16x16, 256 chips)
+
+roofline-frac = compute_s / max(terms): 1.0 means compute-bound at the
+hardware roofline.
+
+{cell_table(after, "pod")}
+
+### Multi-pod mesh (2x16x16, 512 chips)
+
+{cell_table(after, "multipod")}
+
+## Perf (hillclimb log: hypothesis -> change -> before -> after)
+
+{perf_log}
+
+### Auto-extracted before/after (step-bound = max roofline term; cells
+that moved >= 5%)
+
+{before_after(before, mid, after)}
+"""
+    with open(os.path.join(ROOT, "EXPERIMENTS.md"), "w") as f:
+        f.write(doc)
+    print(f"EXPERIMENTS.md written: {n_ok} ok / {n_skip} skipped")
+
+
+if __name__ == "__main__":
+    main()

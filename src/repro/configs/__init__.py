@@ -1,0 +1,17 @@
+"""Assigned architecture configs. Importing this package registers all 10.
+
+Each ``<arch>.py`` holds the exact published config from the assignment;
+``smoke.py`` derives reduced same-family configs for CPU tests; ``shapes.py``
+holds the four input shapes.
+"""
+from . import (deepseek_v3_671b, grok_1_314b, recurrentgemma_2b,
+               command_r_plus_104b, qwen1_5_110b, command_r_35b,
+               minicpm3_4b, qwen2_vl_7b, whisper_tiny, rwkv6_7b, lm_100m)
+from .shapes import SHAPES, ShapeSpec, applicable
+from .smoke import smoke_config
+
+ALL_ARCHS = [
+    "deepseek-v3-671b", "grok-1-314b", "recurrentgemma-2b",
+    "command-r-plus-104b", "qwen1.5-110b", "command-r-35b",
+    "minicpm3-4b", "qwen2-vl-7b", "whisper-tiny", "rwkv6-7b",
+]

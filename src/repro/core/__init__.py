@@ -1,0 +1,29 @@
+"""RTNN-on-TPU core library: the paper's contribution as composable JAX.
+
+Public API:
+    NeighborSearch, neighbor_search       top-level search (Listings 1-3)
+    SearchParams, SearchOpts, SearchResult, GridSpec
+    build_cell_grid, choose_grid_spec     acceleration structure
+    schedule_queries                      section 4 query scheduling
+    compute_megacells, plan_partitions    section 5.1 partitioning
+    plan_bundles, CostModel               section 5.2 bundling
+"""
+from .types import (Array, CellGrid, GridSpec, SearchOpts, SearchParams,
+                    SearchResult)
+from .grid import build_cell_grid, choose_grid_spec, box_count
+from .morton import morton_encode, morton_decode, morton_argsort
+from .schedule import schedule_queries, coherence_statistic
+from .partition import (MegacellStatics, Partition, PartitionPlan,
+                        compute_megacells, megacell_statics, plan_partitions)
+from .bundle import Bundle, CostModel, calibrate, exhaustive_best, plan_bundles
+from .search import NeighborSearch, neighbor_search, window_search
+
+__all__ = [
+    "Array", "CellGrid", "GridSpec", "SearchOpts", "SearchParams",
+    "SearchResult", "build_cell_grid", "choose_grid_spec", "box_count",
+    "morton_encode", "morton_decode", "morton_argsort", "schedule_queries",
+    "coherence_statistic", "MegacellStatics", "Partition", "PartitionPlan",
+    "compute_megacells", "megacell_statics", "plan_partitions", "Bundle",
+    "CostModel", "calibrate", "exhaustive_best", "plan_bundles",
+    "NeighborSearch", "neighbor_search", "window_search",
+]

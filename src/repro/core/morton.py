@@ -1,0 +1,67 @@
+"""3-D Morton (Z-order) codes.
+
+The paper (section 4) Morton-sorts the first-hit AABB centers to order query
+groups; we Morton-sort grid-cell coordinates directly (DESIGN.md section 2:
+a query's containing cell is its "first-hit AABB", available in closed form
+on a uniform grid). 10 bits per axis (grids up to 1024^3) packed in uint32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+_MASKS = (
+    (16, jnp.uint32(0x030000FF)),
+    (8, jnp.uint32(0x0300F00F)),
+    (4, jnp.uint32(0x030C30C3)),
+    (2, jnp.uint32(0x09249249)),
+)
+
+
+def _spread_bits(v: Array) -> Array:
+    """Spread the low 10 bits of ``v`` so consecutive bits are 3 apart."""
+    v = v.astype(jnp.uint32) & jnp.uint32(0x3FF)
+    for shift, mask in _MASKS:
+        v = (v | (v << shift)) & mask
+    return v
+
+
+def morton_encode(ccoord: Array) -> Array:
+    """Morton code of integer cell coordinates ``ccoord`` [..., 3] -> uint32.
+
+    Coordinates must be in [0, 1024). x is the lowest interleaved bit to
+    match the raster convention used in the paper's figures.
+    """
+    x = _spread_bits(ccoord[..., 0])
+    y = _spread_bits(ccoord[..., 1])
+    z = _spread_bits(ccoord[..., 2])
+    return x | (y << 1) | (z << 2)
+
+
+def _compact_bits(v: Array) -> Array:
+    v = v.astype(jnp.uint32) & jnp.uint32(0x09249249)
+    v = (v ^ (v >> 2)) & jnp.uint32(0x030C30C3)
+    v = (v ^ (v >> 4)) & jnp.uint32(0x0300F00F)
+    v = (v ^ (v >> 8)) & jnp.uint32(0x030000FF)
+    v = (v ^ (v >> 16)) & jnp.uint32(0x000003FF)
+    return v
+
+
+def morton_decode(code: Array) -> Array:
+    """Inverse of :func:`morton_encode`; returns int32 [..., 3]."""
+    x = _compact_bits(code)
+    y = _compact_bits(code >> 1)
+    z = _compact_bits(code >> 2)
+    return jnp.stack([x, y, z], axis=-1).astype(jnp.int32)
+
+
+def morton_sort_key(spec, pos: Array) -> Array:
+    """uint32 sort key: Morton code of the containing cell of ``pos``."""
+    return morton_encode(spec.cell_of(pos))
+
+
+def morton_argsort(spec, pos: Array) -> Array:
+    """Permutation that orders ``pos`` [N, 3] by cell Morton code."""
+    return jnp.argsort(morton_sort_key(spec, pos))

@@ -1,0 +1,192 @@
+"""Query partitioning via megacells (paper section 5.1).
+
+Per query, grow a cube of grid cells ("megacell") around the query's cell
+until it holds >= K points or its next growth would cross the r-sphere
+boundary — exactly the paper's iterative 6-direction growth, evaluated in
+O(1) per ring with the grid's summed-area table instead of a CUDA kernel.
+
+The megacell determines the per-query *candidate window radius in cells*
+(``w_search``), the TPU analogue of the paper's per-partition AABB width
+(DESIGN.md section 2): it fixes the static shape of the candidate gather and
+hence the distance work per query (Observation 2's cubic law).
+
+Window sizing:
+  range:          w_search = w*           (megacell itself; the paper's
+                  "AABB = megacell" case, sphere test skippable because the
+                  megacell is inscribed in the r-sphere)
+  knn heuristic:  S = 2*(3/(4*pi))^(1/3) * a   (paper's equi-volume estimate)
+  knn exact:      S = sqrt(3) * a              (paper's conservative
+                  circumsphere bound, Fig. 10c)
+where a = (2*w*+1)*cell is the megacell width; all windows are clamped to
+the full-radius window w_full = ceil(r/cell).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .grid import box_count, clamp_box
+from .types import Array, CellGrid, SearchParams
+
+# paper section 5.1: 2 * cbrt(3 / (4 pi))
+_HEURISTIC_FACTOR = 2.0 * (3.0 / (4.0 * math.pi)) ** (1.0 / 3.0)
+_EXACT_FACTOR = math.sqrt(3.0)
+
+
+def full_window_radius(cell_size: float, radius: float) -> int:
+    """Window radius (cells) that always covers the r-ball of any query."""
+    return max(1, int(math.ceil(radius / cell_size - 1e-6)))
+
+
+def max_inscribed_ring(cell_size: float, radius: float) -> int:
+    """Largest ring w such that the megacell [c-w, c+w] is guaranteed inside
+    the r-sphere of any query in cell c: sqrt(3)*(w+1)*cell <= r."""
+    return int(math.floor(radius / (math.sqrt(3.0) * cell_size) + 1e-6)) - 1
+
+
+@dataclasses.dataclass(frozen=True)
+class MegacellStatics:
+    """Host-static derived quantities of a (grid, params) pair."""
+
+    w_full: int
+    w_sph: int        # max sphere-inscribed ring (-1: none)
+    w_loop: int       # rings actually examined (min(w_sph, opts.w_max))
+
+    @property
+    def has_megacells(self) -> bool:
+        return self.w_loop >= 0
+
+
+def megacell_statics(cell_size: float, params: SearchParams,
+                     w_max: int) -> MegacellStatics:
+    w_sph = max_inscribed_ring(cell_size, params.radius)
+    return MegacellStatics(
+        w_full=full_window_radius(cell_size, params.radius),
+        w_sph=w_sph,
+        w_loop=min(w_max, w_sph),
+    )
+
+
+def _window_from_ring(w_star: Array, found: Array, st: MegacellStatics,
+                      params: SearchParams) -> tuple[Array, Array]:
+    """Map megacell ring -> (w_search, skip_test) per query."""
+    a_cells = 2 * w_star + 1                     # megacell width in cells
+    if params.mode == "range":
+        w_search = jnp.where(found, w_star, st.w_full)
+        skip = found
+    else:
+        factor = (_EXACT_FACTOR if params.knn_window == "exact"
+                  else _HEURISTIC_FACTOR)
+        # half-width of the paper's KNN AABB, in cells, covered from the
+        # query's own cell: w*cell >= S/2  ->  w = ceil(factor*a/2)
+        w_knn = jnp.ceil(0.5 * factor * a_cells - 1e-6).astype(jnp.int32)
+        w_search = jnp.where(found, jnp.minimum(w_knn, st.w_full), st.w_full)
+        skip = jnp.zeros_like(found)             # knn always distance-filters
+    return w_search.astype(jnp.int32), skip
+
+
+@partial(jax.jit, static_argnames=("statics", "params"))
+def compute_megacells(
+    grid: CellGrid,
+    queries: Array,
+    statics: MegacellStatics,
+    params: SearchParams,
+) -> tuple[Array, Array, Array]:
+    """Vectorized megacell growth.
+
+    Returns per-query ``(w_search, skip_test, rho)`` where ``rho`` is the
+    paper's density estimate K/C^3 used by the bundling cost model
+    (section 5.2), with C the megacell width.
+    """
+    nq = queries.shape[0]
+    spec = grid.spec
+    ccoord = spec.cell_of(queries)
+
+    if not statics.has_megacells:
+        w_search = jnp.full((nq,), statics.w_full, jnp.int32)
+        skip = jnp.zeros((nq,), bool)
+        vol = (2.0 * params.radius) ** 3
+        rho = jnp.full((nq,), params.k / vol, jnp.float32)
+        return w_search, skip, rho
+
+    # counts for every ring 0..w_loop — O(1) each via the SAT
+    ring_counts = []
+    for w in range(statics.w_loop + 1):
+        lo, hi = clamp_box(spec, ccoord, w)
+        ring_counts.append(box_count(grid.sat, lo, hi))
+    counts = jnp.stack(ring_counts, axis=-1)            # [Nq, w_loop+1]
+
+    satisfied = counts >= params.k                       # monotone in w
+    found = jnp.any(satisfied, axis=-1)
+    w_star = jnp.argmax(satisfied, axis=-1).astype(jnp.int32)
+
+    w_search, skip = _window_from_ring(w_star, found, statics, params)
+
+    a = (2.0 * w_star.astype(jnp.float32) + 1.0) * spec.cell_size
+    rho_found = params.k / jnp.maximum(a**3, 1e-30)
+    # unfound queries search the full r-window; estimate density from the
+    # largest examined ring
+    a_last = (2.0 * statics.w_loop + 1.0) * spec.cell_size
+    rho_fallback = counts[..., -1].astype(jnp.float32) / (a_last**3)
+    rho = jnp.where(found, rho_found, jnp.maximum(rho_fallback, 1e-12))
+    return w_search, skip, rho.astype(jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class Partition:
+    """One query partition: all queries sharing a window radius/skip flag."""
+
+    w_search: int
+    skip_test: bool
+    count: int            # number of queries (N_i in the cost model)
+    rho: float            # mean density estimate (rho_i)
+    start: int            # offset into the partition-sorted query order
+
+
+@dataclasses.dataclass
+class PartitionPlan:
+    """Host-side partition layout: queries sorted by (partition key, Morton
+    slot) and the per-partition metadata for bundling."""
+
+    perm: np.ndarray              # partition-sorted order over *scheduled* idx
+    partitions: list[Partition]
+    w_full: int
+
+    @property
+    def num_partitions(self) -> int:
+        return len(self.partitions)
+
+
+def plan_partitions(
+    w_search: Array,
+    skip: Array,
+    rho: Array,
+    w_full: int,
+) -> PartitionPlan:
+    """Group queries into partitions (host orchestration, like the paper's
+    host-side partition launch loop in Listing 3)."""
+    w_np = np.asarray(jax.device_get(w_search))
+    s_np = np.asarray(jax.device_get(skip))
+    r_np = np.asarray(jax.device_get(rho))
+    key = w_np.astype(np.int64) * 2 + s_np.astype(np.int64)
+    # stable sort keeps the Morton schedule order within each partition
+    perm = np.argsort(key, kind="stable")
+    key_sorted = key[perm]
+    uniq, starts, counts = np.unique(key_sorted, return_index=True,
+                                     return_counts=True)
+    parts = []
+    for u, st, cn in zip(uniq, starts, counts):
+        sel = perm[st:st + cn]
+        parts.append(Partition(
+            w_search=int(u // 2),
+            skip_test=bool(u % 2),
+            count=int(cn),
+            rho=float(r_np[sel].mean()),
+            start=int(st),
+        ))
+    return PartitionPlan(perm=perm, partitions=parts, w_full=int(w_full))

@@ -1,0 +1,3 @@
+from .pipeline import make_batch, synthetic_stream, batch_specs
+from .pointclouds import (uniform_cloud, kitti_like_cloud, clustered_cloud,
+                          dataset_by_name)

@@ -1,0 +1,91 @@
+"""Synthetic token pipeline: batches for every arch family.
+
+``batch_specs`` returns ShapeDtypeStructs (dry-run path, no allocation);
+``make_batch`` materializes a random batch with the same tree (tests,
+examples, the 100M-train driver); ``synthetic_stream`` is the deterministic,
+checkpoint-resumable training stream (the data cursor is a step index, so
+restore = skip-free seek — fault-tolerance requirement).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ArchConfig
+
+
+def _token_fields(batch: int, seq: int):
+    return {
+        "tokens": ((batch, seq), jnp.int32),
+        "labels": ((batch, seq), jnp.int32),
+        "mask": ((batch, seq), jnp.float32),
+    }
+
+
+def batch_specs(cfg: ArchConfig, batch: int, seq: int
+                ) -> dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input (dry-run)."""
+    if cfg.enc_dec:
+        seq = min(seq, cfg.max_target_len)
+    fields = dict(_token_fields(batch, seq))
+    if cfg.pos == "mrope":
+        fields["pos3"] = ((batch, seq, 3), jnp.int32)
+    if cfg.frontend == "vision_stub" and cfg.n_vision_tokens:
+        fields["vision_embeds"] = (
+            (batch, min(cfg.n_vision_tokens, seq), cfg.d_model), jnp.bfloat16)
+    if cfg.enc_dec:
+        fields["enc_input"] = ((batch, cfg.enc_context, cfg.d_model),
+                               jnp.bfloat16)
+    return {k: jax.ShapeDtypeStruct(s, d) for k, (s, d) in fields.items()}
+
+
+def make_batch(cfg: ArchConfig, batch: int, seq: int, key,
+               dtype=jnp.float32) -> dict[str, jax.Array]:
+    """Random batch with the same tree as ``batch_specs``."""
+    if cfg.enc_dec:
+        seq = min(seq, cfg.max_target_len)
+    ks = jax.random.split(key, 4)
+    tokens = jax.random.randint(ks[0], (batch, seq), 0, cfg.vocab, jnp.int32)
+    labels = jnp.roll(tokens, -1, axis=1)
+    mask = jnp.ones((batch, seq), jnp.float32).at[:, -1].set(0.0)
+    out = {"tokens": tokens, "labels": labels, "mask": mask}
+    if cfg.pos == "mrope":
+        # text tokens: all three position streams equal; vision stub tokens
+        # get (t, h, w) grid positions
+        nv = min(cfg.n_vision_tokens, seq) if cfg.frontend == "vision_stub" \
+            else 0
+        p = jnp.broadcast_to(jnp.arange(seq)[None, :, None],
+                             (batch, seq, 3)).astype(jnp.int32)
+        if nv:
+            side = max(1, int(np.sqrt(nv)))
+            hh = (jnp.arange(nv) // side).astype(jnp.int32)
+            ww = (jnp.arange(nv) % side).astype(jnp.int32)
+            vis = jnp.stack([jnp.zeros((nv,), jnp.int32), hh, ww], -1)
+            p = p.at[:, :nv].set(vis[None])
+        out["pos3"] = p
+    if cfg.frontend == "vision_stub" and cfg.n_vision_tokens:
+        nv = min(cfg.n_vision_tokens, seq)
+        out["vision_embeds"] = jax.random.normal(
+            ks[1], (batch, nv, cfg.d_model), jnp.float32).astype(dtype) * 0.02
+        out["mask"] = out["mask"].at[:, :nv].set(0.0)  # no loss on vision
+    if cfg.enc_dec:
+        out["enc_input"] = jax.random.normal(
+            ks[2], (batch, cfg.enc_context, cfg.d_model),
+            jnp.float32).astype(dtype) * 0.02
+    return out
+
+
+def synthetic_stream(cfg: ArchConfig, batch: int, seq: int, *,
+                     start_step: int = 0, seed: int = 0,
+                     dtype=jnp.float32) -> Iterator[dict[str, jax.Array]]:
+    """Deterministic resumable stream: batch at step s is a pure function of
+    (seed, s), so checkpoint restore resumes exactly."""
+    step = start_step
+    while True:
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+        yield make_batch(cfg, batch, seq, key, dtype)
+        step += 1

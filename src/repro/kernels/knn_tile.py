@@ -1,0 +1,163 @@
+"""Pallas TPU kernel: streaming windowed top-K neighbor selection.
+
+This is the fused hot loop of the search (paper: BVH traversal + IS shader +
+priority queue; here: candidate-tile streaming + MXU distance + VPU
+selection, DESIGN.md section 2):
+
+  grid = (query_tiles, candidate_tiles)   # candidate axis is minor/stream
+  per step:  d2 = ||q||^2 + ||p||^2 - 2 q.p^T   (MXU, [TQ, TM])
+             merge into running best-K held in VMEM scratch
+  last step: emit [TQ, K] distances + indices
+
+The merge uses K-pass extraction over [TQ, K + TM] with a one-hot argmin
+(vectorizes on the VPU; no per-row gathers). A per-step threshold guard
+(@pl.when) skips the merge entirely once no tile candidate beats any row's
+current K-th best — the TPU analogue of the paper's AH-shader early ray
+termination.
+
+Deployment note: on real TPU, K should be padded to a multiple of the lane
+width for the output block; the wrapper keeps logical K and slices.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_TQ = 256
+DEFAULT_TM = 512
+COORD_PAD = 8
+_BIG = 3.4e38            # sentinel "invalid/evicted" distance (plain float:
+_NEG_I32 = -(2**31) + 1  # jnp scalars here would be captured tracer consts)
+
+
+def _merge_topk(best_d2, best_idx, d2, idx, k: int):
+    """Merge candidate tile (d2, idx) into running best (ascending)."""
+    tq = best_d2.shape[0]
+    md2 = jnp.concatenate([best_d2, d2], axis=1)          # [TQ, K+TM]
+    midx = jnp.concatenate([best_idx, idx], axis=1)
+    width = md2.shape[1]
+    lane = jax.lax.broadcasted_iota(jnp.int32, (tq, width), 1)
+    out_d2 = jnp.full_like(best_d2, _BIG)
+    out_idx = jnp.full_like(best_idx, -1)
+
+    def body(j, carry):
+        md2, out_d2, out_idx = carry
+        dmin = jnp.min(md2, axis=1, keepdims=True)        # [TQ, 1]
+        # first occurrence one-hot of the row min
+        is_min = md2 == dmin
+        first = jnp.cumsum(is_min.astype(jnp.int32), axis=1) == 1
+        oh = is_min & first
+        imin = jnp.max(jnp.where(oh, midx, _NEG_I32), axis=1, keepdims=True)
+        col = jax.lax.broadcasted_iota(jnp.int32, out_d2.shape, 1)
+        out_d2 = jnp.where(col == j, dmin, out_d2)
+        out_idx = jnp.where(col == j, imin, out_idx)
+        md2 = jnp.where(oh, _BIG, md2)
+        return md2, out_d2, out_idx
+
+    _, out_d2, out_idx = jax.lax.fori_loop(
+        0, k, body, (md2, out_d2, out_idx))
+    out_idx = jnp.where(out_d2 >= _BIG, -1, out_idx)
+    return out_d2, out_idx
+
+
+def _knn_kernel(q_ref, pt_ref, idx_ref, out_d2_ref, out_idx_ref,
+                best_d2, best_idx, *, k: int, r2: float, skip_test: bool,
+                n_m: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        best_d2[...] = jnp.full_like(best_d2, _BIG)
+        best_idx[...] = jnp.full_like(best_idx, -1)
+
+    q = q_ref[...]                                        # [TQ, 8]
+    p = pt_ref[0]                                         # [8, TM]
+    idx = idx_ref[0][None, :]                             # [1, TM]
+    qn = jnp.sum(q * q, axis=1, keepdims=True)
+    pn = jnp.sum(p * p, axis=0, keepdims=True)
+    cross = jnp.dot(q, p, preferred_element_type=jnp.float32)
+    d2 = jnp.maximum(qn + pn - 2.0 * cross, 0.0)          # [TQ, TM]
+
+    invalid = jnp.broadcast_to(idx < 0, d2.shape)
+    if not skip_test:
+        invalid = invalid | (d2 > r2)
+    d2 = jnp.where(invalid, _BIG, d2)
+    idx_b = jnp.where(invalid, -1, jnp.broadcast_to(idx, d2.shape))
+
+    # threshold guard: does any candidate beat any row's current K-th best?
+    row_kth = jnp.max(best_d2[...], axis=1)               # [TQ]
+    row_min = jnp.min(d2, axis=1)                         # [TQ]
+    beats = jnp.any(row_min < row_kth)
+
+    @pl.when(beats)
+    def _merge():
+        nd2, nidx = _merge_topk(best_d2[...], best_idx[...], d2, idx_b, k)
+        best_d2[...] = nd2
+        best_idx[...] = nidx
+
+    @pl.when(j == n_m - 1)
+    def _emit():
+        out_d2_ref[...] = jnp.where(best_d2[...] >= _BIG, jnp.inf,
+                                    best_d2[...])
+        out_idx_ref[...] = best_idx[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "r2", "skip_test", "tq", "tm", "interpret"))
+def knn_tile(
+    q: jax.Array,          # [Nq, 3] f32, Nq % tq == 0 per query tile group
+    wnd_pos: jax.Array,    # [n_tiles, M, 3] candidate positions per q-tile
+    wnd_idx: jax.Array,    # [n_tiles, M] int32 candidate ids (-1 invalid)
+    *,
+    k: int,
+    r2: float,
+    skip_test: bool = False,
+    tq: int = DEFAULT_TQ,
+    tm: int = DEFAULT_TM,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Streaming top-K of each query against its tile's candidate window.
+
+    Returns (d2 [Nq, k] ascending inf-padded, idx [Nq, k] -1-padded).
+    """
+    n_tiles, m, _ = wnd_pos.shape
+    assert q.shape[0] == n_tiles * tq, (q.shape, n_tiles, tq)
+    m_pad = (-m) % tm
+    wnd_pos = jnp.pad(wnd_pos.astype(jnp.float32),
+                      ((0, 0), (0, m_pad), (0, COORD_PAD - 3)),
+                      constant_values=0.0)
+    wnd_idx = jnp.pad(wnd_idx, ((0, 0), (0, m_pad)), constant_values=-1)
+    wnd_pos_t = jnp.swapaxes(wnd_pos, 1, 2)               # [n_tiles, 8, M]
+    qp = jnp.pad(q.astype(jnp.float32), ((0, 0), (0, COORD_PAD - 3)))
+    n_m = wnd_pos_t.shape[2] // tm
+
+    kernel = functools.partial(_knn_kernel, k=k, r2=float(r2),
+                               skip_test=bool(skip_test), n_m=n_m)
+    out_d2, out_idx = pl.pallas_call(
+        kernel,
+        grid=(n_tiles, n_m),
+        in_specs=[
+            pl.BlockSpec((tq, COORD_PAD), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, COORD_PAD, tm), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((1, tm), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tq, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((tq, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_tiles * tq, k), jnp.float32),
+            jax.ShapeDtypeStruct((n_tiles * tq, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((tq, k), jnp.float32),
+            pltpu.VMEM((tq, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(qp, wnd_pos_t, wnd_idx)
+    return out_d2, out_idx

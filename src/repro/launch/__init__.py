@@ -1,0 +1,2 @@
+# intentionally empty: dryrun.py must set XLA_FLAGS before jax ever loads,
+# so nothing here may import jax (or any repro module that does).

@@ -1,0 +1,444 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver builds ShapeDtypeStruct stand-ins for params,
+optimizer state, batch and caches (no allocation), jits the step with the
+production in/out shardings, runs ``.lower().compile()``, prints
+``memory_analysis()`` / ``cost_analysis()`` and records the roofline terms
+(EXPERIMENTS.md sections Dry-run and Roofline read the JSONs written here).
+
+Usage:
+  python -m repro.launch.dryrun --arch rwkv6-7b --shape train_4k --mesh pod
+  python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import json
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ALL_ARCHS, SHAPES, applicable
+from repro.configs.shapes import ShapeSpec
+from repro.data.pipeline import batch_specs
+from repro.launch import hlo_analysis as H
+from repro.launch.mesh import make_production_mesh
+from repro.models.config import ArchConfig, get_config
+from repro.models.model import (apply_layer, count_params, init_decode_cache,
+                                init_params, layer_groups)
+from repro.sharding.rules import (batch_axes, cache_pspecs, make_shard_fn,
+                                  named_sharding_tree, opt_pspecs,
+                                  param_pspecs)
+from repro.train.optimizer import OptConfig, init_opt_state
+from repro.train.serve_step import make_decode_step, make_prefill_step
+from repro.train.train_step import make_train_step
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+PARAM_DTYPE = jnp.bfloat16
+
+
+def microbatching(cfg: ArchConfig, shape: ShapeSpec, mesh) -> tuple[int, int]:
+    """(n_micro, per-micro global batch) for train cells: B_local scales
+    inversely with parameter count to bound activation memory."""
+    n_b = int(np.prod([mesh.shape[a] for a in batch_axes(mesh)]))
+    params_b = count_params(cfg) / 1e9
+    b_local = 1 if params_b > 50 else (4 if params_b > 5 else 16)
+    b_micro = min(shape.global_batch, n_b * b_local)
+    while shape.global_batch % b_micro:
+        b_micro -= n_b
+    n_micro = shape.global_batch // b_micro
+    return n_micro, b_micro
+
+
+def _batch_shardings(specs: dict, mesh, *, micro_axis: bool) -> dict:
+    baxes = batch_axes(mesh)
+    n_b = int(np.prod([mesh.shape[a] for a in baxes]))
+    out = {}
+    for k, v in specs.items():
+        lead = 1 if micro_axis else 0
+        bdim = v.shape[lead]
+        spec = [None] * v.ndim
+        if baxes and bdim % n_b == 0:
+            spec[lead] = baxes
+        out[k] = NamedSharding(mesh, P(*spec))
+    return out
+
+
+def _with_micro_axis(specs: dict, n_micro: int, b_micro: int) -> dict:
+    out = {}
+    for k, v in specs.items():
+        out[k] = jax.ShapeDtypeStruct((n_micro, b_micro) + v.shape[1:],
+                                      v.dtype)
+    return out
+
+
+def build_cell(cfg: ArchConfig, shape: ShapeSpec, mesh):
+    """Returns (jitted_fn, example_args (ShapeDtypeStructs), meta).
+
+    ``meta["static_bytes_per_device"]`` is the exact per-device footprint of
+    params (+opt state / cache) under the chosen shardings;
+    ``meta["analytic_peak_bytes"]`` adds the remat-aware activation model —
+    the memory figure we stand behind for the v5e 16 GB fit, since the CPU
+    backend's memory_analysis() includes layout copies a TPU build fuses
+    away (EXPERIMENTS.md section Dry-run).
+    """
+    shard = make_shard_fn(mesh)
+    key = jax.random.PRNGKey(0)
+    params_shapes = jax.eval_shape(
+        lambda k: init_params(cfg, k, PARAM_DTYPE), key)
+    cache_shapes = c_specs = None
+    cache_bytes = 0
+    if shape.kind == "decode":
+        cache_shapes = jax.eval_shape(
+            lambda: init_decode_cache(cfg, shape.global_batch,
+                                      shape.seq_len, PARAM_DTYPE))
+        c_specs = cache_pspecs(cache_shapes, mesh, shape.global_batch)
+        cache_bytes = H.sharded_bytes(cache_shapes, c_specs, mesh)
+    profile = _profile_for(params_shapes, shape, mesh, cache_bytes)
+    p_specs = param_pspecs(params_shapes, mesh, profile)
+    p_sh = named_sharding_tree(p_specs, mesh)
+    static_bytes = H.sharded_bytes(params_shapes, p_specs, mesh)
+
+    if shape.kind == "train":
+        n_micro, b_micro = microbatching(cfg, shape, mesh)
+        opt_cfg = OptConfig(quantize_moments=count_params(cfg) > 3e10)
+        opt_shapes = jax.eval_shape(
+            lambda p: init_opt_state(p, opt_cfg), params_shapes)
+        o_specs = opt_pspecs(opt_shapes, mesh)
+        o_sh = named_sharding_tree(o_specs, mesh)
+        bspecs = _with_micro_axis(
+            batch_specs(cfg, b_micro, shape.seq_len), n_micro, b_micro)
+        b_sh = _batch_shardings(bspecs, mesh, micro_axis=True)
+        fn = make_train_step(cfg, opt_cfg, shard=shard, remat=True)
+        jfn = jax.jit(fn, in_shardings=(p_sh, o_sh, b_sh),
+                      out_shardings=(p_sh, o_sh, None),
+                      donate_argnums=(0, 1))
+        args = (params_shapes, opt_shapes, bspecs)
+        static_bytes += H.sharded_bytes(opt_shapes, o_specs, mesh)
+        meta = {"n_micro": n_micro, "b_micro": b_micro,
+                "quantized_opt": opt_cfg.quantize_moments}
+    elif shape.kind == "prefill":
+        bspecs = batch_specs(cfg, shape.global_batch, shape.seq_len)
+        bspecs.pop("labels", None)
+        bspecs.pop("mask", None)
+        b_sh = _batch_shardings(bspecs, mesh, micro_axis=False)
+        fn = make_prefill_step(cfg, shard=shard)
+        jfn = jax.jit(fn, in_shardings=(p_sh, b_sh), out_shardings=None)
+        args = (params_shapes, bspecs)
+        meta = {}
+    else:  # decode: one token against a seq_len KV cache
+        b = shape.global_batch
+        c_sh = named_sharding_tree(c_specs, mesh)
+        tok = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+        t_sh = _batch_shardings({"tokens": tok}, mesh,
+                                micro_axis=False)["tokens"]
+        fn = make_decode_step(cfg, shard=shard)
+        if cfg.pos == "mrope":
+            pos3 = jax.ShapeDtypeStruct((b, 1, 3), jnp.int32)
+            p3_sh = _batch_shardings({"p": pos3}, mesh,
+                                     micro_axis=False)["p"]
+            jfn = jax.jit(lambda p, c, t, p3: fn(p, c, t, p3),
+                          in_shardings=(p_sh, c_sh, t_sh, p3_sh),
+                          out_shardings=(None, c_sh),
+                          donate_argnums=(1,))
+            args = (params_shapes, cache_shapes, tok, pos3)
+        else:
+            jfn = jax.jit(fn, in_shardings=(p_sh, c_sh, t_sh),
+                          out_shardings=(None, c_sh), donate_argnums=(1,))
+            args = (params_shapes, cache_shapes, tok)
+        static_bytes += H.sharded_bytes(cache_shapes, c_specs, mesh)
+        meta = {"cache_len": shape.seq_len}
+    meta["param_profile"] = profile
+    meta["static_bytes_per_device"] = int(static_bytes)
+    meta["analytic_peak_bytes"] = int(
+        static_bytes + H.analytic_activation_bytes(cfg, shape, mesh, meta))
+    return jfn, args, meta
+
+
+def _profile_for(params_shapes, shape: ShapeSpec, mesh,
+                 cache_bytes: int = 0) -> str:
+    """Serving profile (Perf iteration 3): replicate weights over "data"
+    when the model-sharded copy PLUS the sharded cache fits HBM — kills
+    per-token FSDP weight all-gathers. Falls back to FSDP for archs that
+    cannot fit (deepseek-671b, grok-314b, qwen-110b at 32k x 128 cache),
+    recorded in the cell meta."""
+    if shape.kind not in ("decode", "prefill"):
+        return "train"
+    serve_specs = param_pspecs(params_shapes, mesh, profile="serve")
+    w = H.sharded_bytes(params_shapes, serve_specs, mesh)
+    return "serve" if w + cache_bytes < 13e9 else "train"
+
+
+def build_layer_probe(cfg: ArchConfig, shape: ShapeSpec, mesh):
+    """Lower ONE scan-period of the layer stack (fwd+bwd for train) under
+    the production shardings.
+
+    Why: ``compiled.cost_analysis()`` counts while-loop bodies ONCE, so the
+    scanned layer stack (and the microbatch loop) are invisible in the main
+    step's flops. We therefore measure the per-period cost from this probe
+    and compose the true step cost with known static trip counts
+    (EXPERIMENTS.md section Roofline methodology).
+    """
+    groups = layer_groups(cfg)
+    if not groups.n_periods or cfg.enc_dec:
+        return None
+    shard = make_shard_fn(mesh)
+    key = jax.random.PRNGKey(0)
+    params_shapes = jax.eval_shape(
+        lambda k: init_params(cfg, k, PARAM_DTYPE), key)
+    cache_bytes = 0
+    if shape.kind == "decode":
+        full_cache = jax.eval_shape(
+            lambda: init_decode_cache(cfg, shape.global_batch,
+                                      shape.seq_len, PARAM_DTYPE))
+        cache_bytes = H.sharded_bytes(
+            full_cache, cache_pspecs(full_cache, mesh, shape.global_batch),
+            mesh)
+    profile = _profile_for(params_shapes, shape, mesh, cache_bytes)
+    slots = [jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape[1:], s.dtype), slot)
+        for slot in params_shapes["body"]]
+    slot_specs = [param_pspecs(s, mesh, profile) for s in slots]
+    slot_sh = [named_sharding_tree(s, mesh) for s in slot_specs]
+
+    if shape.kind == "train":
+        n_micro, b_micro = microbatching(cfg, shape, mesh)
+        b, s = b_micro, shape.seq_len
+    elif shape.kind == "prefill":
+        b, s = shape.global_batch, shape.seq_len
+    else:
+        b, s = shape.global_batch, 1
+    x = jax.ShapeDtypeStruct((b, s, cfg.d_model), PARAM_DTYPE)
+    pos_shape = (b, s, 3) if cfg.pos == "mrope" else (b, s)
+    pos = jax.ShapeDtypeStruct(pos_shape, jnp.int32)
+    x_sh = _batch_shardings({"x": x, "pos": pos}, mesh, micro_axis=False)
+
+    if shape.kind == "decode":
+        cache_shapes = jax.eval_shape(
+            lambda: init_decode_cache(cfg, b, shape.seq_len, PARAM_DTYPE))
+        slot_caches = [jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape[1:], s.dtype), c)
+            for c in cache_shapes["body"]]
+        c_specs = [cache_pspecs(c, mesh, b) for c in slot_caches]
+        c_sh = [named_sharding_tree(s, mesh) for s in c_specs]
+
+        def probe(slots, caches, x, pos):
+            for si, kind in enumerate(groups.period):
+                x, _ = apply_layer(slots[si], x, cfg, kind, pos=pos,
+                                   cache=caches[si], shard=shard)
+            return x
+
+        jfn = jax.jit(probe, in_shardings=(slot_sh, c_sh, x_sh["x"],
+                                           x_sh["pos"]))
+        return jfn, (slots, slot_caches, x, pos)
+
+    def fwd(slots, x, pos):
+        h = x
+        for si, kind in enumerate(groups.period):
+            h, _ = apply_layer(slots[si], h, cfg, kind, pos=pos,
+                               shard=shard)
+        return jnp.sum(h.astype(jnp.float32))
+
+    if shape.kind == "train":
+        fwd_ck = jax.checkpoint(fwd)
+
+        def probe(slots, x, pos):
+            return jax.value_and_grad(fwd_ck, argnums=(0, 1))(slots, x, pos)
+    else:
+        probe = fwd
+    jfn = jax.jit(probe, in_shardings=(slot_sh, x_sh["x"], x_sh["pos"]))
+    return jfn, (slots, x, pos)
+
+
+def _cost_of(lowered_compiled) -> tuple[dict, dict]:
+    cost = lowered_compiled.cost_analysis()
+    cost = dict(cost[0]) if isinstance(cost, (list, tuple)) else dict(cost)
+    coll = H.collective_bytes(lowered_compiled.as_text())
+    return cost, coll
+
+
+def compose_costs(cfg: ArchConfig, shape: ShapeSpec, mesh, meta,
+                  cost1: dict, coll1: dict,
+                  cost3: dict | None, coll3: dict | None) -> tuple[dict, dict]:
+    """Trip-count-corrected per-device cost (see build_layer_probe).
+
+    train:   total = n_micro*(F1 - opt) + opt
+                     + n_micro*(n_periods-1)*F3 + CE-chunk correction
+    serve:   total = F1 + (n_periods-1)*F3
+    Analytic opt term: flops ~20/param, bytes ~2x resident state. The rwkv
+    inner time-scan body is counted once inside F3 (elementwise state ops,
+    <2% of layer flops — documented undercount).
+    """
+    chips = int(np.prod(list(mesh.shape.values())))
+    groups = layer_groups(cfg)
+    f1 = float(cost1.get("flops", 0.0))
+    b1 = float(cost1.get("bytes accessed", 0.0))
+    c1 = float(coll1["total_bytes"])
+    f3 = float(cost3.get("flops", 0.0)) if cost3 else 0.0
+    b3 = float(cost3.get("bytes accessed", 0.0)) if cost3 else 0.0
+    c3 = float(coll3["total_bytes"]) if coll3 else 0.0
+
+    if shape.kind == "train":
+        n_micro = meta["n_micro"]
+        n_rep = max(groups.n_periods - 1, 0)
+        n_params = count_params(cfg)
+        opt_f = 20.0 * n_params / chips
+        opt_b = 2.0 * meta["static_bytes_per_device"]
+        seq = min(shape.seq_len, cfg.max_target_len) if cfg.enc_dec \
+            else shape.seq_len
+        n_chunks = max(1, seq // 512)
+        v_sh = cfg.vocab if cfg.vocab % mesh.shape.get("model", 1) else \
+            cfg.vocab // mesh.shape.get("model", 1)
+        ce_f = 6.0 * meta["b_micro"] * (seq / n_chunks) * cfg.d_model * \
+            cfg.vocab / chips * (n_chunks - 1) * n_micro
+        ce_b = (n_chunks - 1) * n_micro * 3.0 * meta["b_micro"] / chips * \
+            (seq / n_chunks) * v_sh * 4.0
+        flops = n_micro * max(f1 - opt_f, 0) + opt_f \
+            + n_micro * n_rep * f3 + ce_f
+        byts = n_micro * max(b1 - opt_b, 0) + opt_b \
+            + n_micro * n_rep * b3 + ce_b
+        cbytes = n_micro * c1 + n_micro * n_rep * c3
+    else:
+        n_rep = max(groups.n_periods - 1, 0)
+        flops = f1 + n_rep * f3
+        byts = b1 + n_rep * b3
+        cbytes = c1 + n_rep * c3
+    return ({"flops": flops, "bytes accessed": byts},
+            {"total_bytes": cbytes,
+             "per_kind_bytes": coll1.get("per_kind_bytes", {}),
+             "counts": coll1.get("counts", {})})
+
+
+def model_flops_global(cfg: ArchConfig, shape: ShapeSpec) -> float:
+    """6*N*D for train (N = active params, D = tokens/step); 2*N*D for one
+    decoded token per sequence; 2*N*D over prompt tokens for prefill."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        seq = min(shape.seq_len, cfg.max_target_len) if cfg.enc_dec \
+            else shape.seq_len
+        return 6.0 * n_active * shape.global_batch * seq
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch  # decode: 1 token/seq
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str,
+             force: bool = False) -> dict:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    out_path = os.path.join(OUT_DIR, f"{mesh_name}__{arch}__{shape_name}.json")
+    if os.path.exists(out_path) and not force:
+        with open(out_path) as f:
+            return json.load(f)
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    record: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name}
+
+    ok, reason = applicable(cfg, shape)
+    if not ok:
+        record.update({"status": "skipped", "reason": reason})
+        with open(out_path, "w") as f:
+            json.dump(record, f, indent=1)
+        return record
+
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multipod"))
+    chips = int(np.prod(list(mesh.shape.values())))
+    try:
+        t0 = time.time()
+        jfn, args, meta = build_cell(cfg, shape, mesh)
+        with mesh:
+            lowered = jfn.lower(*args)
+            t_lower = time.time() - t0
+            t0 = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time() - t0
+        mem = H.memory_summary(compiled)
+        print(f"[{mesh_name}|{arch}|{shape_name}] memory_analysis:", mem)
+        cost1, coll1 = _cost_of(compiled)
+        print(f"[{mesh_name}|{arch}|{shape_name}] cost_analysis(raw): "
+              f"flops={cost1.get('flops', 0):.3e} "
+              f"bytes={cost1.get('bytes accessed', 0):.3e}")
+
+        cost3 = coll3 = None
+        probe = build_layer_probe(cfg, shape, mesh)
+        if probe is not None:
+            pfn, pargs = probe
+            with mesh:
+                pcompiled = pfn.lower(*pargs).compile()
+            cost3, coll3 = _cost_of(pcompiled)
+        cost, coll = compose_costs(cfg, shape, mesh, meta,
+                                   cost1, coll1, cost3, coll3)
+        terms = H.roofline(cost, coll, chips=chips,
+                           model_flops_global=model_flops_global(cfg, shape))
+        record.update({
+            "status": "ok",
+            "chips": chips,
+            "meta": meta,
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "memory": mem,
+            "cost_raw": {k: float(v) for k, v in cost1.items()
+                         if isinstance(v, (int, float))},
+            "cost_probe": ({k: float(v) for k, v in cost3.items()
+                            if isinstance(v, (int, float))}
+                           if cost3 else None),
+            "cost_corrected": cost,
+            "collectives": coll,
+            "roofline": terms.to_dict(),
+            "param_count": count_params(cfg),
+            "active_param_count": cfg.active_param_count(),
+        })
+    except Exception as e:
+        record.update({"status": "error",
+                       "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-4000:]})
+        print(f"[{mesh_name}|{arch}|{shape_name}] FAILED: {e}")
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=1)
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=ALL_ARCHS + [None])
+    ap.add_argument("--shape", default=None,
+                    choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="pod",
+                    choices=["pod", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = ALL_ARCHS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) \
+        else [args.shape]
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+
+    results = []
+    for mesh_name in meshes:
+        for arch in archs:
+            for shape_name in shapes:
+                r = run_cell(arch, shape_name, mesh_name, force=args.force)
+                status = r.get("status")
+                dom = r.get("roofline", {}).get("dominant", "-")
+                print(f"{mesh_name:8s} {arch:22s} {shape_name:12s} "
+                      f"{status:8s} dominant={dom}")
+                results.append(r)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_err = len(results) - n_ok - n_skip
+    print(f"\ndry-run cells: {n_ok} ok, {n_skip} skipped (documented), "
+          f"{n_err} errors")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,178 @@
+"""Compiled-artifact analysis: collective bytes + roofline terms.
+
+``compiled.as_text()`` is the post-SPMD, per-device optimized HLO module:
+shapes on collective ops are per-device shapes. We sum result-operand sizes
+for every collective op (async ``-start`` variants counted once, ``-done``
+skipped). ``cost_analysis()`` flops/bytes are likewise per-device for the
+single SPMD program; the global figures in the brief's formulas are
+per-device x chips, so the chips factor cancels — we record both.
+
+Hardware constants (TPU v5e-class, from the brief):
+  197 TFLOP/s bf16 per chip | 819 GB/s HBM | ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|[\w\[\],{}\s]*?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict[str, Any]:
+    """Per-device bytes moved by collectives, by op kind + total."""
+    per_kind: dict[str, int] = {}
+    counts: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        if "-done" in line:
+            continue
+        m = _COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        lhs = line.split("=", 1)[0] + "=" + line.split("=", 1)[1].split(
+            kind)[0]
+        sizes = [_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(lhs)]
+        nbytes = max(sizes) if sizes else 0
+        per_kind[kind] = per_kind.get(kind, 0) + nbytes
+        counts[kind] = counts.get(kind, 0) + 1
+    return {
+        "per_kind_bytes": per_kind,
+        "counts": counts,
+        "total_bytes": sum(per_kind.values()),
+    }
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    """All terms in seconds-per-step (per chip)."""
+
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    model_flops: float            # 6*N*D (train) or 2*N*D per token (decode)
+    useful_flops_ratio: float     # model_flops_per_device / HLO flops
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    def to_dict(self) -> dict:
+        return {**dataclasses.asdict(self), "dominant": self.dominant}
+
+
+def roofline(cost: dict, coll: dict, *, chips: int,
+             model_flops_global: float) -> RooflineTerms:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    cbytes = float(coll["total_bytes"])
+    mf_dev = model_flops_global / chips
+    return RooflineTerms(
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=byts / HBM_BW,
+        collective_s=cbytes / ICI_BW,
+        flops_per_device=flops,
+        bytes_per_device=byts,
+        collective_bytes_per_device=cbytes,
+        model_flops=model_flops_global,
+        useful_flops_ratio=(mf_dev / flops) if flops else 0.0,
+    )
+
+
+def memory_summary(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+        keys = ["argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "alias_size_in_bytes",
+                "generated_code_size_in_bytes"]
+        out = {k: int(getattr(ma, k)) for k in keys if hasattr(ma, k)}
+        args = out.get("argument_size_in_bytes", 0)
+        alias = out.get("alias_size_in_bytes", 0)
+        temp = out.get("temp_size_in_bytes", 0)
+        outb = out.get("output_size_in_bytes", 0)
+        out["peak_bytes_estimate"] = args + temp + max(outb - alias, 0)
+        return out
+    except Exception as e:  # backend without memory_analysis
+        return {"error": f"{type(e).__name__}: {e}"}
+
+
+def sharded_bytes(shapes_tree, specs_tree, mesh) -> int:
+    """Exact per-device bytes of a ShapeDtypeStruct tree under specs."""
+    import jax
+    import numpy as np
+    from jax.sharding import PartitionSpec
+
+    total = 0
+    flat_shapes = jax.tree.leaves(shapes_tree)
+    flat_specs = jax.tree.leaves(
+        specs_tree, is_leaf=lambda x: isinstance(x, PartitionSpec))
+    for sh, spec in zip(flat_shapes, flat_specs):
+        n = int(np.prod(sh.shape)) if sh.shape else 1
+        denom = 1
+        for ax in spec:
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            for a in axes:
+                denom *= mesh.shape[a]
+        total += n * sh.dtype.itemsize // max(denom, 1)
+    return total
+
+
+def analytic_activation_bytes(cfg, shape, mesh, meta) -> int:
+    """Per-device activation watermark under per-layer remat:
+    layer-boundary checkpoints + one layer's live intermediates + CE chunk.
+    """
+    import numpy as np
+
+    baxes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    n_b = int(np.prod([mesh.shape[a] for a in baxes])) if baxes else 1
+    if shape.kind == "train":
+        b_local = max(1, meta.get("b_micro", shape.global_batch) // n_b)
+    else:
+        b_local = max(1, shape.global_batch // n_b)
+    seq = min(shape.seq_len, cfg.max_target_len) if cfg.enc_dec \
+        else shape.seq_len
+    if shape.kind == "decode":
+        seq = 1
+    d = cfg.d_model
+    resid = b_local * seq * d * 2                       # bf16 checkpoints
+    ckpts = cfg.n_layers * resid if shape.kind == "train" else 2 * resid
+    # one live layer: qkv + attn logits (n_heads/model-sharded if divisible)
+    n_m = mesh.shape.get("model", 1)
+    h_shard = cfg.n_heads // n_m if cfg.n_heads % n_m == 0 else cfg.n_heads
+    live = 4 * resid + b_local * h_shard * seq * min(seq, 4096) * 4
+    ce = 0
+    if shape.kind == "train":
+        chunk = min(seq, 512)
+        v_shard = cfg.vocab // n_m if cfg.vocab % n_m == 0 else cfg.vocab
+        ce = b_local * chunk * v_shard * 4 * 2          # logits + grad
+    return int(ckpts + live + ce)

@@ -1,0 +1,39 @@
+"""Production mesh construction.
+
+A function (not a module constant) so importing this module never touches
+jax device state. Single pod: 16x16 = 256 chips (data x model).
+Multi-pod: 2x16x16 = 512 chips; the leading "pod" axis is pure data
+parallelism across pods (ICI within a pod, DCI across).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+    from jax.sharding import Mesh
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)} — "
+            "run under XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{max(n, 512)} (dryrun.py sets this automatically)")
+    dev_array = np.asarray(devices[:n]).reshape(shape)
+    return Mesh(dev_array, axes)
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for CPU multi-device tests."""
+    import jax
+    from jax.sharding import Mesh
+
+    n = int(np.prod(shape))
+    dev_array = np.asarray(jax.devices()[:n]).reshape(shape)
+    return Mesh(dev_array, axes)

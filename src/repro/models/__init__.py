@@ -1,0 +1,9 @@
+"""Model zoo for the assigned architectures (LM-family transformers).
+
+The RTNN technique itself is 3-D spatial search and does not apply inside
+these forward passes (DESIGN.md section 4 Arch-applicability); the zoo is a
+first-class feature of the same runtime: same mesh, launcher, checkpointing
+and dry-run machinery as the neighbor-search core.
+"""
+from .config import ArchConfig, MLAConfig, MoEConfig, register, get_config, list_configs
+from .model import init_params, train_forward, decode_step, init_decode_cache

@@ -1,0 +1,739 @@
+"""Layer library: init + apply for every block the 10 archs need.
+
+Functional style: ``init_*`` returns a param dict; ``*_fwd`` applies it.
+All matmuls run in ``cfg`` compute dtype with f32 accumulation where it
+matters (norms, softmax, router, recurrences); logits are f32.
+
+Sharding: activations are annotated through the ``shard`` callable
+(name -> constraint); a no-op by default so smoke tests run meshless.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+NO_SHARD = lambda x, name: x
+
+
+def _dense_init(key, shape, scale=None, dtype=jnp.float32):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype) -> PyTree:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(x: Array, p: PyTree, eps: float) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_layernorm(d: int, dtype) -> PyTree:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(x: Array, p: PyTree, eps: float) -> Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = out * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(d_rot: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_rot, 2, jnp.float32) / d_rot))
+
+
+def apply_rope(x: Array, pos: Array, theta: float) -> Array:
+    """x [B,S,H,D] (D even, fully rotary), pos [B,S] int -> rotated x."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                          # [D/2]
+    ang = pos[..., None].astype(jnp.float32) * freqs      # [B,S,D/2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: Array, pos3: Array, theta: float,
+                sections: tuple[int, int, int]) -> Array:
+    """Qwen2-VL M-RoPE: the head dim's frequency bands are split into
+    (temporal, height, width) sections, each rotated by its own position
+    stream. x [B,S,H,D], pos3 [B,S,3]."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = rope_freqs(d, theta)                          # [half]
+    # section s covers freqs[off:off+sections[s]]
+    sec = jnp.zeros((half,), jnp.int32)
+    off = 0
+    for i, s in enumerate(sections):
+        sec = sec.at[off:off + s].set(i)
+        off += s
+    pos_per_freq = jnp.take_along_axis(
+        pos3.astype(jnp.float32),                         # [B,S,3]
+        jnp.broadcast_to(sec[None, None, :], pos3.shape[:2] + (half,)),
+        axis=-1)                                          # [B,S,half]
+    ang = pos_per_freq * freqs
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA / MQA / MHA), optional sliding window, KV cache
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg, dtype) -> PyTree:
+    d, h, hk, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _dense_init(ks[0], (d, h, hd), dtype=dtype),
+        "wk": _dense_init(ks[1], (d, hk, hd), dtype=dtype),
+        "wv": _dense_init(ks[2], (d, hk, hd), dtype=dtype),
+        "wo": _dense_init(ks[3], (h, hd, d), scale=1.0 / math.sqrt(h * hd),
+                          dtype=dtype),
+    }
+    if cfg.attn_bias:
+        p["bq"] = jnp.zeros((h, hd), dtype)
+        p["bk"] = jnp.zeros((hk, hd), dtype)
+        p["bv"] = jnp.zeros((hk, hd), dtype)
+    return p
+
+
+def _sdpa(q: Array, k: Array, v: Array, *, causal: bool,
+          window: int | None, q_offset: Array | int = 0,
+          kpos: Array | None = None, shard=NO_SHARD) -> Array:
+    """q [B,Sq,H,D], k/v [B,Sk,Hk,D] -> [B,Sq,H,D]. GQA by head grouping.
+
+    When the kv-head count does not divide the tensor-parallel axis but the
+    q-head count does (e.g. kv=8 under model=16), kv heads are REPLICATED to
+    H (Megatron-style) so attention shards fully on q heads — otherwise the
+    score tensor replicates across the model axis and attention compute
+    blows up by the axis size (EXPERIMENTS.md section Perf, iteration 1).
+
+    ``q_offset`` positions query i at absolute position q_offset+i for
+    causal/window masking against the absolute-indexed k axis.
+    """
+    b, sq, h, d = q.shape
+    sk, hk = k.shape[1], k.shape[2]
+    dv = v.shape[-1]           # MLA: value head dim != qk head dim
+    g = h // hk
+    msize = getattr(shard, "model_size", 1)
+    expand = g > 1 and (hk % msize != 0) and (h % msize == 0)
+
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    if kpos is None:
+        kp = jnp.arange(sk)[None, :]
+        mask = jnp.ones((sq, sk), bool)
+    else:
+        # explicit absolute key positions (ring-buffer caches); negative
+        # entries mark unwritten slots
+        kp = kpos[None, :]
+        mask = kp >= 0
+    if causal:
+        mask &= kp <= qpos
+    if window is not None:
+        mask &= kp > qpos - window
+
+    if expand:
+        ke = jnp.repeat(k, g, axis=2)                       # [B,Sk,H,D]
+        ve = jnp.repeat(v, g, axis=2)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q, ke,
+                            preferred_element_type=jnp.float32)
+        logits = shard(logits, "attn_logits4") / math.sqrt(d)
+        logits = jnp.where(mask[None, None], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+        out = jnp.einsum("bhqk,bkhd->bqhd", probs, ve)
+        return out
+    qg = q.reshape(b, sq, hk, g, d)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                        preferred_element_type=jnp.float32)
+    logits = shard(logits, "attn_logits")
+    logits = logits / math.sqrt(d)
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return out.reshape(b, sq, h, dv)
+
+
+def attention_fwd(p: PyTree, x: Array, cfg, *, pos: Array,
+                  cache: PyTree | None = None, causal: bool = True,
+                  window: int | None = None, shard=NO_SHARD
+                  ) -> tuple[Array, PyTree | None]:
+    """Returns (out [B,S,d], new_cache). ``cache`` = dict(k, v, length) with
+    k/v [B, S_max, Hk, D]; decode appends at ``length``."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = shard(q, "act_heads")
+
+    if cfg.pos == "rope":
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    elif cfg.pos == "mrope":
+        hd = cfg.head_dim
+        sections = (hd // 2 - 2 * (hd // 2 // 3), hd // 2 // 3, hd // 2 // 3)
+        q = apply_mrope(q, pos, cfg.rope_theta, sections)
+        k = apply_mrope(k, pos, cfg.rope_theta, sections)
+
+    if cache is None:
+        out = _sdpa(q, k, v, causal=causal, window=window, shard=shard)
+        new_cache = None
+    elif "pos" in cache:
+        # ring-buffer cache (sliding-window layers): write at
+        # length % s_max, track absolute key positions for the mask —
+        # cache memory stays O(window), the sub-quadratic decode claim
+        length = cache["length"]
+        s_max = cache["k"].shape[1]
+        slot = length % s_max
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(
+            cache["k"].dtype), (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(
+            cache["v"].dtype), (0, slot, 0, 0))
+        new_pos = jnp.broadcast_to(
+            jnp.arange(q.shape[1], dtype=jnp.int32)[None] + length,
+            (cache["pos"].shape[0], q.shape[1]))
+        cp = jax.lax.dynamic_update_slice(cache["pos"], new_pos, (0, slot))
+        out = _sdpa(q, ck, cv, causal=True, window=window,
+                    q_offset=length, kpos=cp[0], shard=shard)
+        new_cache = {"k": ck, "v": cv, "pos": cp,
+                     "length": length + q.shape[1]}
+    else:
+        length = cache["length"]
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(
+            cache["k"].dtype), (0, length, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(
+            cache["v"].dtype), (0, length, 0, 0))
+        # causal mask with q_offset both enforces causality and excludes
+        # unwritten cache rows (kpos > length + Sq - 1)
+        out = _sdpa(q, ck, cv, causal=True, window=window,
+                    q_offset=length, shard=shard)
+        new_cache = {"k": ck, "v": cv, "length": length + q.shape[1]}
+    o = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return shard(o, "act_resid"), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Multi-head Latent Attention (DeepSeek-V2/V3, MiniCPM3)
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg, dtype) -> PyTree:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 6)
+    return {
+        "q_a": _dense_init(ks[0], (d, m.q_rank), dtype=dtype),
+        "q_norm": init_rmsnorm(m.q_rank, dtype),
+        "q_b": _dense_init(ks[1], (m.q_rank, h, m.d_nope + m.d_rope),
+                           dtype=dtype),
+        "kv_a": _dense_init(ks[2], (d, m.kv_rank + m.d_rope), dtype=dtype),
+        "kv_norm": init_rmsnorm(m.kv_rank, dtype),
+        "kv_b": _dense_init(ks[3], (m.kv_rank, h, m.d_nope + m.d_v),
+                            dtype=dtype),
+        "wo": _dense_init(ks[4], (h, m.d_v, d),
+                          scale=1.0 / math.sqrt(h * m.d_v), dtype=dtype),
+    }
+
+
+def _mla_absorbed_decode(p: PyTree, q_nope, q_rope, latent, k_rope,
+                         length, m, shard=NO_SHARD):
+    """Absorbed MLA decode (DeepSeek-V2 section 2.1.3 trick).
+
+    The naive decode expands the latent cache through kv_b to full K/V every
+    step — O(S * H * (d_nope + d_v)) work and traffic. Absorbing kv_b's key
+    half into the query and its value half into the output keeps attention
+    entirely in the kv_rank-dim latent space: O(S * kv_rank) per head-step.
+    Recorded as EXPERIMENTS.md Perf iteration 2 (deepseek/minicpm3 decode).
+    """
+    kv_b_k = p["kv_b"][..., : m.d_nope]            # [r, H, d_nope]
+    kv_b_v = p["kv_b"][..., m.d_nope:]             # [r, H, d_v]
+    # query into latent space: [B,1,H,r]
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, kv_b_k)
+    scores = jnp.einsum("bshr,btr->bhst", q_lat.astype(jnp.float32),
+                        latent.astype(jnp.float32))
+    scores += jnp.einsum("bshk,btk->bhst", q_rope.astype(jnp.float32),
+                         k_rope[:, :, 0].astype(jnp.float32))
+    scores = scores / math.sqrt(m.d_nope + m.d_rope)
+    s_max = latent.shape[1]
+    valid = jnp.arange(s_max)[None, None, None, :] <= length
+    scores = jnp.where(valid, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    o_lat = jnp.einsum("bhst,btr->bshr", probs.astype(latent.dtype), latent)
+    out = jnp.einsum("bshr,rhv->bshv", o_lat, kv_b_v)  # [B,1,H,d_v]
+    return out
+
+
+def mla_fwd(p: PyTree, x: Array, cfg, *, pos: Array,
+            cache: PyTree | None = None, shard=NO_SHARD
+            ) -> tuple[Array, PyTree | None]:
+    """MLA forward. The decode cache stores only the compressed latent
+    (kv_rank) + shared rope key (d_rope) per token — the memory win that
+    makes MLA's long-context decode cheap."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+
+    q = jnp.einsum("bsd,dr->bsr", x, p["q_a"])
+    q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", q, p["q_b"])
+    q_nope, q_rope = q[..., : m.d_nope], q[..., m.d_nope:]
+    q_rope = apply_rope(q_rope, pos, cfg.rope_theta)
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    q = shard(q, "act_heads")
+
+    kv = jnp.einsum("bsd,dr->bsr", x, p["kv_a"])
+    latent, k_rope = kv[..., : m.kv_rank], kv[..., m.kv_rank:]
+    latent = rmsnorm(latent, p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], pos, cfg.rope_theta)
+
+    if cache is not None:
+        length = cache["length"]
+        latent_c = jax.lax.dynamic_update_slice(
+            cache["latent"], latent.astype(cache["latent"].dtype),
+            (0, length, 0))
+        k_rope_c = jax.lax.dynamic_update_slice(
+            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype),
+            (0, length, 0, 0))
+        new_cache = {"latent": latent_c, "k_rope": k_rope_c,
+                     "length": length + s}
+        if s == 1:
+            # absorbed decode: never expands the latent cache
+            out = _mla_absorbed_decode(p, q_nope, q_rope, latent_c,
+                                       k_rope_c, length, m, shard)
+            o = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+            return shard(o, "act_resid"), new_cache
+        latent, k_rope, q_offset = latent_c, k_rope_c, length
+    else:
+        new_cache = None
+        q_offset = 0
+
+    kv_full = jnp.einsum("bsr,rhk->bshk", latent, p["kv_b"])
+    k_nope, v = kv_full[..., : m.d_nope], kv_full[..., m.d_nope:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, k_nope.shape[:3] + (m.d_rope,))],
+        -1)
+    out = _sdpa(q, k, v, causal=True, window=None, q_offset=q_offset,
+                shard=shard)
+    o = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return shard(o, "act_resid"), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_swiglu(key, d: int, ff: int, dtype) -> PyTree:
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": _dense_init(ks[0], (d, ff), dtype=dtype),
+        "w_up": _dense_init(ks[1], (d, ff), dtype=dtype),
+        "w_down": _dense_init(ks[2], (ff, d), dtype=dtype),
+    }
+
+
+def swiglu_fwd(p: PyTree, x: Array, shard=NO_SHARD) -> Array:
+    g = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    h = shard(jax.nn.silu(g) * u, "act_ffn")
+    return shard(jnp.einsum("bsf,fd->bsd", h, p["w_down"]), "act_resid")
+
+
+def init_gelu_mlp(key, d: int, ff: int, dtype) -> PyTree:
+    ks = jax.random.split(key, 2)
+    return {
+        "w1": _dense_init(ks[0], (d, ff), dtype=dtype),
+        "b1": jnp.zeros((ff,), dtype),
+        "w2": _dense_init(ks[1], (ff, d), dtype=dtype),
+        "b2": jnp.zeros((d,), dtype),
+    }
+
+
+def gelu_mlp_fwd(p: PyTree, x: Array, shard=NO_SHARD) -> Array:
+    h = jnp.einsum("bsd,df->bsf", x, p["w1"]) + p["b1"]
+    h = shard(jax.nn.gelu(h), "act_ffn")
+    return shard(jnp.einsum("bsf,fd->bsd", h, p["w2"]) + p["b2"],
+                 "act_resid")
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (top-k routing, sorted capacity dispatch)
+# ---------------------------------------------------------------------------
+
+def init_moe(key, cfg, dtype) -> PyTree:
+    mo = cfg.moe
+    d = cfg.d_model
+    ff = mo.d_expert or cfg.d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": _dense_init(ks[0], (d, mo.n_experts), scale=0.02,
+                              dtype=jnp.float32),
+        "w_gate": _dense_init(ks[1], (mo.n_experts, d, ff), dtype=dtype),
+        "w_up": _dense_init(ks[2], (mo.n_experts, d, ff), dtype=dtype),
+        "w_down": _dense_init(ks[3], (mo.n_experts, ff, d), dtype=dtype),
+    }
+    if mo.router_aux_free:
+        p["router_bias"] = jnp.zeros((mo.n_experts,), jnp.float32)
+    if mo.n_shared:
+        p["shared"] = init_swiglu(ks[4], d, ff * mo.n_shared, dtype)
+    return p
+
+
+def moe_fwd(p: PyTree, x: Array, cfg, shard=NO_SHARD) -> Array:
+    """Top-k MoE with *sorted* capacity dispatch.
+
+    Tokens are sorted by routed expert before the expert GEMMs — the same
+    coherence transformation as the paper's section-4 query scheduling
+    (sort work items so adjacent lanes take the same path), applied to
+    expert-route divergence instead of ray divergence (DESIGN.md section 4).
+    """
+    mo = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32), p["router"])
+    if "router_bias" in p:
+        # DeepSeek-V3 aux-free balancing: bias shifts selection only
+        sel_logits = logits + p["router_bias"]
+    else:
+        sel_logits = logits
+    gates, experts = jax.lax.top_k(sel_logits, mo.top_k)      # [t, k]
+    probs = jax.nn.softmax(
+        jnp.take_along_axis(logits, experts, axis=1), axis=-1)
+
+    # ---- sorted dispatch (coherence sort) ----
+    flat_e = experts.reshape(-1)                              # [t*k]
+    order = jnp.argsort(flat_e)                               # sort by expert
+    sorted_e = flat_e[order]
+    # rank within expert group
+    first = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    rank = jnp.arange(t * mo.top_k) - first
+    cap = int(math.ceil(t * mo.top_k / mo.n_experts * mo.capacity_factor))
+    keep = rank < cap
+    slot = jnp.where(keep, sorted_e * cap + rank, mo.n_experts * cap)
+    token_of = order // mo.top_k
+    # gather tokens into [E, cap, d]
+    buf = jnp.zeros((mo.n_experts * cap + 1, d), x.dtype)
+    buf = buf.at[slot].set(xf[token_of], mode="drop")
+    buf = shard(buf[:-1].reshape(mo.n_experts, cap, d), "moe_dispatch")
+
+    g = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    h = shard(jax.nn.silu(g) * u, "moe_ffn")
+    eo = jnp.einsum("ecf,efd->ecd", h, p["w_down"])           # [E, cap, d]
+
+    # scatter back with router weights
+    w = probs.reshape(-1)[order]                              # [t*k]
+    contrib = eo.reshape(-1, d)                               # [E*cap, d]
+    out = jnp.zeros((t, d), jnp.float32)
+    safe_slot = jnp.clip(slot, 0, mo.n_experts * cap - 1)
+    src = jnp.where(keep[:, None], contrib[safe_slot]
+                    .astype(jnp.float32) * w[:, None], 0.0)
+    out = out.at[token_of].add(src)
+    out = out.astype(x.dtype)
+
+    if "shared" in p:
+        out = out + swiglu_fwd(p["shared"], xf[None], shard)[0]
+    return shard(out.reshape(b, s, d), "act_resid")
+
+
+def moe_aux_loss(p: PyTree, x: Array, cfg) -> Array:
+    """Load-balancing auxiliary loss (Switch-style); returns scalar f32."""
+    mo = cfg.moe
+    t = x.shape[0] * x.shape[1]
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, -1).reshape(t, mo.n_experts)
+    _, experts = jax.lax.top_k(logits.reshape(t, -1), mo.top_k)
+    counts = jnp.zeros((mo.n_experts,), jnp.float32).at[
+        experts.reshape(-1)].add(1.0)
+    frac_tokens = counts / (t * mo.top_k)
+    frac_probs = probs.mean(0)
+    return mo.n_experts * jnp.sum(frac_tokens * frac_probs)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU recurrent block (RecurrentGemma / Griffin)
+# ---------------------------------------------------------------------------
+
+def init_rglru_block(key, cfg, dtype) -> PyTree:
+    d = cfg.d_model
+    dr = d  # lru width = d_model in RecurrentGemma-2B
+    ks = jax.random.split(key, 7)
+    c = 8.0
+    # a = sigmoid(lam) ** c initialised so a in [0.9, 0.999]
+    u = jax.random.uniform(ks[0], (dr,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log((u ** (1 / c)) / (1 - u ** (1 / c)))
+    return {
+        "w_x": _dense_init(ks[1], (d, dr), dtype=dtype),      # linear branch
+        "w_y": _dense_init(ks[2], (d, dr), dtype=dtype),      # gate branch
+        "conv_w": _dense_init(ks[3], (4, dr), scale=0.5, dtype=dtype),
+        "lam": lam,                                           # f32
+        "w_a": _dense_init(ks[4], (dr, dr), scale=0.02, dtype=dtype),
+        "b_a": jnp.zeros((dr,), jnp.float32),
+        "w_i": _dense_init(ks[5], (dr, dr), scale=0.02, dtype=dtype),
+        "b_i": jnp.zeros((dr,), jnp.float32),
+        "w_out": _dense_init(ks[6], (dr, d), dtype=dtype),
+    }
+
+
+def _rglru_scan(xt: Array, a_t: Array, h0: Array) -> tuple[Array, Array]:
+    """Linear recurrence h_t = a_t * h_{t-1} + sqrt(1-a_t^2) * x_t via
+    associative scan over the sequence axis. xt/a_t [B,S,D] f32."""
+    gated = jnp.sqrt(jnp.maximum(1.0 - a_t * a_t, 1e-12)) * xt
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    a_acc, h = jax.lax.associative_scan(combine, (a_t, gated), axis=1)
+    h = h + a_acc * h0[:, None, :]
+    return h, h[:, -1, :]
+
+
+def rglru_block_fwd(p: PyTree, x: Array, cfg, *,
+                    cache: PyTree | None = None, shard=NO_SHARD
+                    ) -> tuple[Array, PyTree | None]:
+    """Griffin recurrent block: (conv1d -> RG-LRU) branch gated by GeLU
+    branch. ``cache`` = dict(h [B,D], conv [B,3,D]) for decode."""
+    b, s, d = x.shape
+    xb = jnp.einsum("bsd,de->bse", x, p["w_x"])
+    yb = jax.nn.gelu(jnp.einsum("bsd,de->bse", x, p["w_y"]))
+
+    # depthwise causal conv, kernel 4
+    if cache is None:
+        prev = jnp.zeros((b, 3, xb.shape[-1]), xb.dtype)
+    else:
+        prev = cache["conv"].astype(xb.dtype)
+    xpad = jnp.concatenate([prev, xb], axis=1)
+    conv = sum(xpad[:, i : i + s, :] * p["conv_w"][i] for i in range(4))
+    new_conv = xpad[:, -3:, :]
+
+    cf = conv.astype(jnp.float32)
+    r = jax.nn.sigmoid(cf @ p["w_a"].astype(jnp.float32) + p["b_a"])
+    i = jax.nn.sigmoid(cf @ p["w_i"].astype(jnp.float32) + p["b_i"])
+    log_a = -8.0 * r * jax.nn.softplus(p["lam"])          # log a_t
+    a_t = jnp.exp(log_a)
+    gated_x = i * cf
+    h0 = (jnp.zeros((b, xb.shape[-1]), jnp.float32) if cache is None
+          else cache["h"].astype(jnp.float32))
+    h, h_last = _rglru_scan(gated_x, a_t, h0)
+    h = shard(h.astype(x.dtype), "act_ffn")
+
+    out = jnp.einsum("bse,ed->bsd", h * yb, p["w_out"])
+    new_cache = None if cache is None else {"h": h_last, "conv": new_conv}
+    return shard(out, "act_resid"), new_cache
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 (Finch): data-dependent decay time-mix + channel-mix
+# ---------------------------------------------------------------------------
+
+def init_rwkv6(key, cfg, dtype) -> PyTree:
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    n_h = d // hd
+    ks = jax.random.split(key, 12)
+    lora = 64
+    return {
+        "maa": 0.5 * jnp.ones((5, d), jnp.float32),          # r,k,v,w,g mix
+        "w0": jnp.full((d,), -6.0, jnp.float32),             # decay base
+        "w1": _dense_init(ks[0], (d, lora), scale=0.02, dtype=jnp.float32),
+        "w2": _dense_init(ks[1], (lora, d), scale=0.02, dtype=jnp.float32),
+        "u": jnp.zeros((n_h, hd), jnp.float32),              # bonus
+        "wr": _dense_init(ks[2], (d, d), dtype=dtype),
+        "wk": _dense_init(ks[3], (d, d), dtype=dtype),
+        "wv": _dense_init(ks[4], (d, d), dtype=dtype),
+        "wg": _dense_init(ks[5], (d, d), dtype=dtype),
+        "wo": _dense_init(ks[6], (d, d), dtype=dtype),
+        "ln_x": init_layernorm(d, jnp.float32),              # group-norm-ish
+    }
+
+
+import os as _os
+
+# chunked-parallel RWKV6 (EXPERIMENTS.md Perf iteration 4): 0 = sequential
+# lax.scan reference; >0 = chunk length of the parallel form
+RWKV_CHUNK = int(_os.environ.get("REPRO_RWKV_CHUNK", "16"))
+_LOG_DECAY_CLAMP = 5.0   # per-step |log w| cap: keeps all chunk exponent
+                         # differences within f32 range (DESIGN/EXPERIMENTS)
+
+
+def _rwkv_scan_core(rf, kf, vf, wf, u, state0):
+    """Reference recurrence (sequential scan over time).
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t ; out_t = r_t (S_{t-1} + u k^T v).
+    rf/kf/vf/wf [B,S,H,hd] f32; state0 [B,H,hd,hd] f32."""
+
+    def step(state, ins):
+        r_t, k_t, v_t, w_t = ins                             # [B,H,hd]
+        kv = k_t[..., :, None] * v_t[..., None, :]           # [B,H,hd,hd]
+        out = jnp.einsum("bhi,bhij->bhj", r_t, state + u[..., None] * kv)
+        state = w_t[..., None] * state + kv
+        return state, out
+
+    ins = tuple(jnp.moveaxis(t, 1, 0) for t in (rf, kf, vf, wf))
+    state_last, outs = jax.lax.scan(step, state0, ins)
+    return jnp.moveaxis(outs, 0, 1), state_last
+
+
+def _rwkv_chunked_core(rf, kf, vf, wf, u, state0, chunk: int):
+    """Chunked-parallel form: identical math, O(S/chunk) state traffic.
+
+    Within a chunk, out_t = r_t diag(A_{t-1}) S_0
+                          + sum_{i<t} r_t diag(A_{t-1}/A_i) k_i^T v_i
+                          + (r_t . u k_t) v_t
+    with A_t = prod_{j<=t} w_j. All three terms are matmuls (MXU) over the
+    chunk; the carried state materializes once per chunk instead of once
+    per token — the sequential scan's dominant HBM traffic (state
+    read+write every step) drops by ~chunk x. Exponent differences stay in
+    f32 range because per-step |log w| <= _LOG_DECAY_CLAMP and chunks are
+    short (16 * 5 = 80 < log(f32max) ~ 88.7).
+    """
+    b, s, h, hd = rf.shape
+    pad = (-s) % chunk
+    if pad:
+        z = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        rf, kf, vf = z(rf), z(kf), z(vf)
+        wf = jnp.pad(wf, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                     constant_values=1.0)
+    n_c = (s + pad) // chunk
+    resh = lambda t: t.reshape(b, n_c, chunk, h, hd).transpose(1, 0, 2, 3, 4)
+    rc, kc, vc, wc = resh(rf), resh(kf), resh(vf), resh(wf)  # [N,B,C,H,hd]
+
+    lw = jnp.log(jnp.maximum(wc, 1e-38))                     # <= 0
+    lA = jnp.cumsum(lw, axis=2)                              # inclusive
+    lA_ex = lA - lw                                          # exclusive
+    mask = (jnp.arange(chunk)[:, None] > jnp.arange(chunk)[None, :])
+
+    def one_chunk(state, ins):
+        r, k, v, la, la_ex = ins                             # [B,C,H,hd]
+        la_c = la[:, -1:, :, :]                              # total decay
+        rr = r * jnp.exp(la_ex)                              # <= |r|, safe
+        kk_neg = k * jnp.exp(-la)                            # bounded by clamp
+        # inter-chunk: decayed initial state
+        out = jnp.einsum("bchk,bhkv->bchv", rr, state)
+        # intra-chunk (strictly causal)
+        scores = jnp.einsum("bthk,bihk->bhti", rr, kk_neg)
+        scores = jnp.where(mask[None, None], scores, 0.0)
+        out += jnp.einsum("bhti,bihv->bthv", scores, v)
+        # diagonal bonus term
+        bonus = jnp.einsum("bchk,bchk->bch", r, u[None, None] * k)
+        out += bonus[..., None] * v
+        # state to next chunk
+        k_dec = k * jnp.exp(la_c - la)
+        state = state * jnp.exp(la_c[:, 0])[..., None] + \
+            jnp.einsum("bihk,bihv->bhkv", k_dec, v)
+        return state, out
+
+    state_last, outs = jax.lax.scan(one_chunk, state0,
+                                    (rc, kc, vc, lA, lA_ex))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, s + pad, h, hd)
+    return out[:, :s], state_last
+
+
+def rwkv6_timemix_fwd(p: PyTree, x: Array, cfg, *,
+                      cache: PyTree | None = None, shard=NO_SHARD
+                      ) -> tuple[Array, PyTree | None]:
+    """RWKV-6 time mix. State S [B, H, hd, hd]; recurrence
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t ; out_t = r_t (S_{t-1} + u k_t^T v_t).
+    Training/prefill use the chunked-parallel core when RWKV_CHUNK > 0
+    (identical math, validated in tests); decode uses the single-step form.
+    """
+    b, s, d = x.shape
+    hd = cfg.rwkv_head_dim
+    n_h = d // hd
+
+    if cache is None:
+        x_prev = jnp.zeros((b, 1, d), x.dtype)
+        state0 = jnp.zeros((b, n_h, hd, hd), jnp.float32)
+    else:
+        x_prev = cache["x_prev"][:, None, :].astype(x.dtype)
+        state0 = cache["state"]
+    xs = jnp.concatenate([x_prev, x[:, :-1, :]], axis=1)     # token shift
+    diff = xs - x
+
+    def mix(i):
+        return x + diff * p["maa"][i].astype(x.dtype)
+
+    xr, xk, xv, xw, xg = (mix(i) for i in range(5))
+    r = jnp.einsum("bsd,de->bse", xr, p["wr"]).reshape(b, s, n_h, hd)
+    k = jnp.einsum("bsd,de->bse", xk, p["wk"]).reshape(b, s, n_h, hd)
+    v = jnp.einsum("bsd,de->bse", xv, p["wv"]).reshape(b, s, n_h, hd)
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["wg"]))
+    wf = xw.astype(jnp.float32)
+    w = p["w0"] + jnp.tanh(wf @ p["w1"]) @ p["w2"]           # [B,S,d]
+    w = jnp.exp(-jnp.clip(jnp.exp(w), 0.0, _LOG_DECAY_CLAMP))
+    w = w.reshape(b, s, n_h, hd)                             # decay in (0,1)
+
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    u = p["u"]
+
+    if RWKV_CHUNK > 0 and s > 1:
+        out, state_last = _rwkv_chunked_core(
+            rf, kf, vf, w.astype(jnp.float32), u, state0, RWKV_CHUNK)
+    else:
+        out, state_last = _rwkv_scan_core(
+            rf, kf, vf, w.astype(jnp.float32), u, state0)
+    out = out.reshape(b, s, d)                               # [B,S,d]
+    out = layernorm(out, p["ln_x"], 1e-5).astype(x.dtype) * g.astype(x.dtype)
+    out = jnp.einsum("bsd,de->bse", out, p["wo"])
+    new_cache = None
+    if cache is not None:
+        new_cache = {"x_prev": x[:, -1, :], "state": state_last}
+    return shard(out, "act_resid"), new_cache
+
+
+def init_rwkv6_channelmix(key, cfg, dtype) -> PyTree:
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "maa_k": 0.5 * jnp.ones((d,), jnp.float32),
+        "maa_r": 0.5 * jnp.ones((d,), jnp.float32),
+        "wk": _dense_init(ks[0], (d, ff), dtype=dtype),
+        "wv": _dense_init(ks[1], (ff, d), dtype=dtype),
+        "wr": _dense_init(ks[2], (d, d), dtype=dtype),
+    }
+
+
+def rwkv6_channelmix_fwd(p: PyTree, x: Array, cfg, *,
+                         cache: PyTree | None = None, shard=NO_SHARD
+                         ) -> tuple[Array, PyTree | None]:
+    b, s, d = x.shape
+    if cache is None:
+        x_prev = jnp.zeros((b, 1, d), x.dtype)
+    else:
+        x_prev = cache["x_prev"][:, None, :].astype(x.dtype)
+    xs = jnp.concatenate([x_prev, x[:, :-1, :]], axis=1)
+    diff = xs - x
+    xk = x + diff * p["maa_k"].astype(x.dtype)
+    xr = x + diff * p["maa_r"].astype(x.dtype)
+    kk = jnp.einsum("bsd,df->bsf", xk, p["wk"])
+    h = shard(jnp.square(jax.nn.relu(kk)), "act_ffn")
+    kv = jnp.einsum("bsf,fd->bsd", h, p["wv"])
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["wr"]))
+    new_cache = None if cache is None else {"x_prev": x[:, -1, :]}
+    return shard(rr * kv, "act_resid"), new_cache

@@ -1,0 +1,572 @@
+"""Model assembly: config -> params / train forward / decode step.
+
+HLO-size discipline: layers are executed as ``lax.scan`` over *periods* of
+the config's layer pattern (per-period params stacked on a leading axis),
+so the lowered HLO contains one trace per distinct layer kind rather than
+one per layer. A ``dense_prefix`` (DeepSeek's first dense layers) and any
+tail layers that do not fill a whole period get their own groups.
+
+Memory discipline: the period body is wrapped in ``jax.checkpoint`` (layer-
+boundary remat) and the cross-entropy is computed in sequence chunks with
+the vocab axis sharded (chunked_ce_loss) so full [B,S,V] logits are never
+materialized.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers as L
+from .config import ArchConfig
+
+Array = jax.Array
+PyTree = Any
+NO_SHARD = L.NO_SHARD
+
+
+# ---------------------------------------------------------------------------
+# per-layer init/apply dispatch
+# ---------------------------------------------------------------------------
+
+def _layer_uses_moe(cfg: ArchConfig, kind: str) -> bool:
+    return cfg.moe is not None and kind == "attn"
+
+
+def _norm(x: Array, p: PyTree, eps: float) -> Array:
+    """Dispatch RMSNorm vs LayerNorm on param structure."""
+    return L.layernorm(x, p, eps) if "bias" in p else L.rmsnorm(x, p, eps)
+
+
+def _init_block_norm(cfg: ArchConfig, dtype) -> PyTree:
+    return (L.init_layernorm(cfg.d_model, dtype) if cfg.family == "audio"
+            else L.init_rmsnorm(cfg.d_model, dtype))
+
+
+def _ffn_fwd(p: PyTree, x: Array, cfg: ArchConfig, shard) -> Array:
+    if "router" in p:
+        return L.moe_fwd(p, x, cfg, shard=shard)
+    if "w1" in p:
+        return L.gelu_mlp_fwd(p, x, shard=shard)
+    return L.swiglu_fwd(p, x, shard=shard)
+
+
+def init_layer(key, cfg: ArchConfig, kind: str, dtype) -> PyTree:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    if kind in ("attn", "attn_dense", "local_attn"):
+        p = {"ln1": _init_block_norm(cfg, dtype),
+             "ln2": _init_block_norm(cfg, dtype)}
+        if cfg.mla is not None:
+            p["mixer"] = L.init_mla(ks[0], cfg, dtype)
+        else:
+            p["mixer"] = L.init_attention(ks[0], cfg, dtype)
+        if _layer_uses_moe(cfg, kind):
+            p["ffn"] = L.init_moe(ks[1], cfg, dtype)
+        elif cfg.family == "audio":
+            p["ffn"] = L.init_gelu_mlp(ks[1], d, cfg.d_ff, dtype)
+        else:
+            p["ffn"] = L.init_swiglu(ks[1], d, cfg.d_ff, dtype)
+        return p
+    if kind == "rglru":
+        return {
+            "ln1": L.init_rmsnorm(d, dtype),
+            "mixer": L.init_rglru_block(ks[0], cfg, dtype),
+            "ln2": L.init_rmsnorm(d, dtype),
+            "ffn": L.init_swiglu(ks[1], d, cfg.d_ff, dtype),
+        }
+    if kind == "rwkv":
+        return {
+            "ln1": L.init_layernorm(d, dtype),
+            "mixer": L.init_rwkv6(ks[0], cfg, dtype),
+            "ln2": L.init_layernorm(d, dtype),
+            "ffn": L.init_rwkv6_channelmix(ks[1], cfg, dtype),
+        }
+    raise ValueError(f"unknown layer kind {kind}")
+
+
+def apply_layer(p: PyTree, x: Array, cfg: ArchConfig, kind: str, *,
+                pos: Array, cache: PyTree | None = None,
+                shard=NO_SHARD) -> tuple[Array, PyTree | None]:
+    if kind in ("attn", "attn_dense", "local_attn"):
+        h = _norm(x, p["ln1"], cfg.norm_eps)
+        window = cfg.local_window if kind == "local_attn" else None
+        if cfg.mla is not None:
+            a, new_cache = L.mla_fwd(p["mixer"], h, cfg, pos=pos,
+                                     cache=cache, shard=shard)
+        else:
+            a, new_cache = L.attention_fwd(
+                p["mixer"], h, cfg, pos=pos, cache=cache, causal=True,
+                window=window, shard=shard)
+        x = x + a
+        h = _norm(x, p["ln2"], cfg.norm_eps)
+        return x + _ffn_fwd(p["ffn"], h, cfg, shard), new_cache
+    if kind == "rglru":
+        h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+        a, new_cache = L.rglru_block_fwd(p["mixer"], h, cfg, cache=cache,
+                                         shard=shard)
+        x = x + a
+        h = L.rmsnorm(x, p["ln2"], cfg.norm_eps)
+        return x + L.swiglu_fwd(p["ffn"], h, shard=shard), new_cache
+    if kind == "rwkv":
+        h = L.layernorm(x, p["ln1"], cfg.norm_eps)
+        a, c1 = L.rwkv6_timemix_fwd(p["mixer"], h, cfg, cache=(
+            cache["tm"] if cache is not None else None), shard=shard)
+        x = x + a
+        h = L.layernorm(x, p["ln2"], cfg.norm_eps)
+        f, c2 = L.rwkv6_channelmix_fwd(p["ffn"], h, cfg, cache=(
+            cache["cm"] if cache is not None else None), shard=shard)
+        new_cache = None if cache is None else {"tm": c1, "cm": c2}
+        return x + f, new_cache
+    raise ValueError(f"unknown layer kind {kind}")
+
+
+# ---------------------------------------------------------------------------
+# layer grouping (scan periods)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LayerGroups:
+    prefix_kinds: tuple[str, ...]   # unrolled dense prefix (DeepSeek)
+    period: tuple[str, ...]         # scanned pattern
+    n_periods: int
+    tail_kinds: tuple[str, ...]     # unrolled remainder
+
+
+def layer_groups(cfg: ArchConfig) -> LayerGroups:
+    kinds = list(cfg.layer_kinds)
+    prefix = tuple(kinds[: cfg.dense_prefix])
+    rest = kinds[cfg.dense_prefix:]
+    period = tuple(cfg.layer_pattern)
+    n_periods = len(rest) // len(period)
+    tail = tuple(rest[n_periods * len(period):])
+    return LayerGroups(prefix, period, n_periods, tail)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.float32) -> PyTree:
+    groups = layer_groups(cfg)
+    keys = jax.random.split(key, 16)
+    d = cfg.d_model
+    p: dict[str, Any] = {
+        "embed": L._dense_init(keys[0], (cfg.vocab, d), scale=0.02,
+                               dtype=dtype),
+        "final_norm": (L.init_layernorm(d, dtype) if cfg.family == "audio"
+                       or cfg.layer_pattern == ("rwkv",)
+                       else L.init_rmsnorm(d, dtype)),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = L._dense_init(keys[1], (d, cfg.vocab), scale=0.02,
+                                     dtype=dtype)
+
+    if groups.prefix_kinds:
+        p["prefix"] = [init_layer(k, cfg, kind, dtype) for k, kind in
+                       zip(jax.random.split(keys[2], len(groups.prefix_kinds)),
+                           groups.prefix_kinds)]
+    if groups.n_periods:
+        slot_params = []
+        for si, kind in enumerate(groups.period):
+            ks = jax.random.split(keys[3 + si % 8], groups.n_periods)
+            stacked = jax.tree.map(
+                lambda *xs: jnp.stack(xs),
+                *[init_layer(k, cfg, kind, dtype) for k in ks])
+            slot_params.append(stacked)
+        p["body"] = slot_params
+    if groups.tail_kinds:
+        p["tail"] = [init_layer(k, cfg, kind, dtype) for k, kind in
+                     zip(jax.random.split(keys[11], len(groups.tail_kinds)),
+                         groups.tail_kinds)]
+
+    if cfg.enc_dec:
+        p["enc"] = _init_encoder(keys[12], cfg, dtype)
+        p["dec_pos"] = L._dense_init(keys[13], (cfg.max_target_len, d),
+                                     scale=0.02, dtype=dtype)
+        # decoder cross-attention per layer
+        p["cross"] = [
+            {"ln": L.init_rmsnorm(d, dtype),
+             "attn": L.init_attention(keys[14], cfg, dtype)}
+            for _ in range(cfg.n_layers)]
+    if cfg.mtp:
+        p["mtp"] = {
+            "proj": L._dense_init(keys[15], (2 * d, d), dtype=dtype),
+            "block": init_layer(keys[15], cfg, "attn_dense", dtype),
+            "norm": L.init_rmsnorm(d, dtype),
+        }
+    return p
+
+
+def _init_encoder(key, cfg: ArchConfig, dtype) -> PyTree:
+    """Whisper encoder over precomputed (stub) frame embeddings."""
+    d = cfg.d_model
+    ks = jax.random.split(key, cfg.n_enc_layers + 1)
+    enc_cfg = dataclasses.replace(cfg, mla=None, pos="none")
+    return {
+        "pos": L._dense_init(ks[0], (cfg.enc_context, d), scale=0.02,
+                             dtype=dtype),
+        "layers": [
+            {"ln1": L.init_layernorm(d, dtype),
+             "attn": L.init_attention(k, enc_cfg, dtype),
+             "ln2": L.init_layernorm(d, dtype),
+             "mlp": L.init_gelu_mlp(k, d, cfg.d_ff, dtype)}
+            for k in ks[1:]],
+        "ln_post": L.init_layernorm(d, dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# forward (training)
+# ---------------------------------------------------------------------------
+
+def _run_layers(params: PyTree, x: Array, cfg: ArchConfig, *, pos: Array,
+                shard=NO_SHARD, remat: bool = True) -> Array:
+    groups = layer_groups(cfg)
+    for p_l, kind in zip(params.get("prefix", []), groups.prefix_kinds):
+        x, _ = apply_layer(p_l, x, cfg, kind, pos=pos, shard=shard)
+
+    if groups.n_periods:
+        def body(carry, slot_params):
+            h = carry
+            for si, kind in enumerate(groups.period):
+                h, _ = apply_layer(slot_params[si], h, cfg, kind,
+                                   pos=pos, shard=shard)
+            return h, None
+
+        body_fn = jax.checkpoint(body) if remat else body
+        x, _ = jax.lax.scan(body_fn, x, params["body"])
+
+    for p_l, kind in zip(params.get("tail", []), groups.tail_kinds):
+        x, _ = apply_layer(p_l, x, cfg, kind, pos=pos, shard=shard)
+    return x
+
+
+def encoder_fwd(params: PyTree, enc_in: Array, cfg: ArchConfig,
+                shard=NO_SHARD, remat: bool = False) -> Array:
+    """Whisper encoder: precomputed conv-stub embeddings -> memory."""
+    e = params["enc"]
+    x = enc_in + e["pos"][None, : enc_in.shape[1]]
+
+    def one(x, lp):
+        h = L.layernorm(x, lp["ln1"], cfg.norm_eps)
+        a, _ = L.attention_fwd(lp["attn"], h, cfg, pos=jnp.zeros(
+            x.shape[:2], jnp.int32), causal=False, shard=shard)
+        x = x + a
+        h = L.layernorm(x, lp["ln2"], cfg.norm_eps)
+        return x + L.gelu_mlp_fwd(lp["mlp"], h, shard=shard)
+
+    one_fn = jax.checkpoint(one) if remat else one
+    for lp in e["layers"]:
+        x = one_fn(x, lp)
+    return L.layernorm(x, e["ln_post"], cfg.norm_eps)
+
+
+def _dec_layers_with_cross(params: PyTree, x: Array, memory: Array,
+                           cfg: ArchConfig, *, pos: Array,
+                           self_caches=None, cross_kv=None,
+                           shard=NO_SHARD, remat: bool = False):
+    """Whisper decoder: per layer self-attn -> cross-attn -> mlp.
+
+    Layers are unrolled (whisper-tiny: 4) with optional per-layer remat.
+    ``cross_kv`` precomputed (k, v) per layer for decode.
+    """
+    groups = layer_groups(cfg)
+    kinds = list(groups.prefix_kinds) + list(groups.period) * \
+        groups.n_periods + list(groups.tail_kinds)
+    layer_list = _unstack_layers(params, groups)
+    new_self = []
+
+    def one(x, p_l, cp, cache_i, ckv):
+        h = _norm(x, p_l["ln1"], cfg.norm_eps)
+        a, nc = L.attention_fwd(p_l["mixer"], h, cfg, pos=pos,
+                                cache=cache_i, causal=True, shard=shard)
+        x = x + a
+        h = L.rmsnorm(x, cp["ln"], cfg.norm_eps)
+        # cross attention: keys/values from encoder memory
+        q = jnp.einsum("bsd,dhk->bshk", h, cp["attn"]["wq"])
+        if ckv is not None:
+            ck, cv = ckv
+        else:
+            ck = jnp.einsum("bsd,dhk->bshk", memory, cp["attn"]["wk"])
+            cv = jnp.einsum("bsd,dhk->bshk", memory, cp["attn"]["wv"])
+        o = L._sdpa(q, ck, cv, causal=False, window=None, shard=shard)
+        x = x + jnp.einsum("bshk,hkd->bsd", o, cp["attn"]["wo"])
+        h = _norm(x, p_l["ln2"], cfg.norm_eps)
+        return x + _ffn_fwd(p_l["ffn"], h, cfg, shard), nc
+
+    one_fn = jax.checkpoint(one, static_argnums=()) if remat else one
+    for li, (p_l, kind) in enumerate(zip(layer_list, kinds)):
+        cache_i = None if self_caches is None else self_caches[li]
+        ckv = None if cross_kv is None else cross_kv[li]
+        x, nc = one_fn(x, p_l, params["cross"][li], cache_i, ckv)
+        new_self.append(nc)
+    return x, new_self
+
+
+def _unstack_layers(params: PyTree, groups: LayerGroups) -> list[PyTree]:
+    out = list(params.get("prefix", []))
+    if groups.n_periods:
+        for pi in range(groups.n_periods):
+            for si in range(len(groups.period)):
+                out.append(jax.tree.map(lambda a: a[pi],
+                                        params["body"][si]))
+    out += list(params.get("tail", []))
+    return out
+
+
+def chunked_ce_loss(x: Array, unembed: Array, labels: Array, mask: Array,
+                    *, chunk: int = 512, shard=NO_SHARD) -> Array:
+    """Mean next-token CE without materializing [B,S,V] logits: sequence is
+    processed in chunks; the vocab axis inherits the unembed sharding so
+    each chunk's logits live sharded on "model"."""
+    b, s, d = x.shape
+    n_chunk = max(1, s // chunk)
+    xc = x.reshape(b, n_chunk, s // n_chunk, d).swapaxes(0, 1)
+    lc = labels.reshape(b, n_chunk, s // n_chunk).swapaxes(0, 1)
+    mc = mask.reshape(b, n_chunk, s // n_chunk).swapaxes(0, 1)
+
+    def one(args):
+        xx, ll, mm = args
+        logits = jnp.einsum("bsd,dv->bsv", xx, unembed,
+                            preferred_element_type=jnp.float32)
+        logits = shard(logits, "logits")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        safe_ll = jnp.clip(ll, 0)       # masked labels may be sentinels
+        gold = jnp.take_along_axis(
+            logits, safe_ll[..., None].astype(jnp.int32), axis=-1)[..., 0]
+        nll = (lse - gold) * mm
+        return jnp.sum(nll), jnp.sum(mm)
+
+    nlls, cnts = jax.lax.map(one, (xc, lc, mc))
+    return jnp.sum(nlls) / jnp.maximum(jnp.sum(cnts), 1.0)
+
+
+def train_forward(params: PyTree, batch: dict[str, Array], cfg: ArchConfig,
+                  *, shard=NO_SHARD, remat: bool = True) -> Array:
+    """Full training loss for one (micro)batch. ``batch`` keys per family:
+    tokens/labels/mask (+pos3 for vlm, +vision_embeds; +enc_input for
+    audio)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = params["embed"][tokens]
+    x = shard(x, "act_resid")
+
+    if cfg.frontend == "vision_stub":
+        nv = cfg.n_vision_tokens
+        x = jnp.concatenate([batch["vision_embeds"].astype(x.dtype),
+                             x[:, nv:]], axis=1) if nv else x
+        pos = batch["pos3"]
+    elif cfg.pos == "mrope":
+        pos = batch["pos3"]
+    else:
+        pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    unembed = (params["embed"].T if cfg.tie_embeddings
+               else params["unembed"])
+
+    if cfg.enc_dec:
+        memory = encoder_fwd(params, batch["enc_input"], cfg, shard,
+                             remat=remat)
+        x = x + params["dec_pos"][None, :s]
+        x, _ = _dec_layers_with_cross(params, x, memory, cfg, pos=pos,
+                                      shard=shard, remat=remat)
+        x = L.layernorm(x, params["final_norm"], cfg.norm_eps)
+        return chunked_ce_loss(x, unembed, batch["labels"], batch["mask"],
+                               shard=shard)
+
+    x = _run_layers(params, x, cfg, pos=pos, shard=shard, remat=remat)
+    x = (L.layernorm(x, params["final_norm"], cfg.norm_eps)
+         if "bias" in params["final_norm"]
+         else L.rmsnorm(x, params["final_norm"], cfg.norm_eps))
+    loss = chunked_ce_loss(x, unembed, batch["labels"], batch["mask"],
+                           shard=shard)
+
+    if cfg.mtp:
+        # multi-token prediction (DeepSeek-V3): one extra block predicts
+        # t+2 from [h_t ; emb(t+1)]
+        emb_next = jnp.concatenate(
+            [params["embed"][tokens[:, 1:]],
+             jnp.zeros_like(x[:, :1])], axis=1)
+        h = jnp.concatenate([x, emb_next.astype(x.dtype)], axis=-1)
+        h = jnp.einsum("bsd,dk->bsk", h, params["mtp"]["proj"])
+        h, _ = apply_layer(params["mtp"]["block"], h, cfg, "attn_dense",
+                           pos=pos, shard=shard)
+        h = L.rmsnorm(h, params["mtp"]["norm"], cfg.norm_eps)
+        labels2 = jnp.concatenate(
+            [batch["labels"][:, 1:], jnp.zeros_like(tokens[:, :1])], axis=1)
+        mask2 = jnp.concatenate(
+            [batch["mask"][:, 1:], jnp.zeros_like(batch["mask"][:, :1])],
+            axis=1)
+        loss = loss + 0.1 * chunked_ce_loss(h, unembed, labels2, mask2,
+                                            shard=shard)
+
+    if cfg.moe is not None:
+        # one representative aux-loss evaluation on the embedding output
+        # (cheap proxy; per-layer aux summing is a config option)
+        pass
+    return loss
+
+
+# ---------------------------------------------------------------------------
+# decode (serving)
+# ---------------------------------------------------------------------------
+
+def init_decode_cache(cfg: ArchConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16) -> PyTree:
+    """Per-layer cache stacked per scan slot (mirrors param layout)."""
+    groups = layer_groups(cfg)
+
+    def one(kind, lead):
+        if kind in ("attn", "attn_dense", "local_attn"):
+            s_max = (min(max_len, cfg.local_window)
+                     if kind == "local_attn" else max_len)
+            if kind == "local_attn":
+                # ring buffer (O(window) memory) with absolute positions
+                hk, hd = cfg.n_kv_heads, cfg.head_dim
+                return {"k": jnp.zeros((*lead, batch, s_max, hk, hd),
+                                       dtype),
+                        "v": jnp.zeros((*lead, batch, s_max, hk, hd),
+                                       dtype),
+                        "pos": jnp.full((*lead, batch, s_max), -1,
+                                        jnp.int32),
+                        "length": jnp.zeros(lead, jnp.int32) if lead else
+                        jnp.int32(0)}
+            if cfg.mla is not None:
+                m = cfg.mla
+                c = {"latent": jnp.zeros((*lead, batch, s_max, m.kv_rank),
+                                         dtype),
+                     "k_rope": jnp.zeros((*lead, batch, s_max, 1, m.d_rope),
+                                         dtype),
+                     "length": jnp.zeros(lead, jnp.int32) if lead else
+                     jnp.int32(0)}
+            else:
+                hk, hd = cfg.n_kv_heads, cfg.head_dim
+                c = {"k": jnp.zeros((*lead, batch, s_max, hk, hd), dtype),
+                     "v": jnp.zeros((*lead, batch, s_max, hk, hd), dtype),
+                     "length": jnp.zeros(lead, jnp.int32) if lead else
+                     jnp.int32(0)}
+            return c
+        if kind == "rglru":
+            d = cfg.d_model
+            return {"h": jnp.zeros((*lead, batch, d), jnp.float32),
+                    "conv": jnp.zeros((*lead, batch, 3, d), dtype)}
+        if kind == "rwkv":
+            d = cfg.d_model
+            hd = cfg.rwkv_head_dim
+            return {"tm": {"x_prev": jnp.zeros((*lead, batch, d), dtype),
+                           "state": jnp.zeros((*lead, batch, d // hd, hd,
+                                               hd), jnp.float32)},
+                    "cm": {"x_prev": jnp.zeros((*lead, batch, d), dtype)}}
+        raise ValueError(kind)
+
+    cache: dict[str, Any] = {}
+    if groups.prefix_kinds:
+        cache["prefix"] = [one(k, ()) for k in groups.prefix_kinds]
+    if groups.n_periods:
+        cache["body"] = [one(k, (groups.n_periods,)) for k in groups.period]
+    if groups.tail_kinds:
+        cache["tail"] = [one(k, ()) for k in groups.tail_kinds]
+    return cache
+
+
+def decode_step(params: PyTree, cache: PyTree, tokens: Array,
+                cfg: ArchConfig, *, pos: Array | None = None,
+                shard=NO_SHARD) -> tuple[Array, PyTree]:
+    """One decode step: tokens [B, 1] -> (logits [B, 1, V], new cache)."""
+    groups = layer_groups(cfg)
+    b = tokens.shape[0]
+    x = params["embed"][tokens]
+    x = shard(x, "act_resid")
+    if pos is None:
+        length = 0
+        if groups.prefix_kinds and "length" in cache["prefix"][0]:
+            length = cache["prefix"][0]["length"]
+        elif groups.n_periods:
+            for si, kind in enumerate(groups.period):
+                if kind in ("attn", "attn_dense", "local_attn"):
+                    length = cache["body"][si]["length"][0]
+                    break
+        pos = jnp.broadcast_to(jnp.asarray(length)[None, None], (b, 1))
+
+    new_cache: dict[str, Any] = {}
+    if groups.prefix_kinds:
+        ncs = []
+        for p_l, kind, c in zip(params["prefix"], groups.prefix_kinds,
+                                cache["prefix"]):
+            x, nc = apply_layer(p_l, x, cfg, kind, pos=pos, cache=c,
+                                shard=shard)
+            ncs.append(nc)
+        new_cache["prefix"] = ncs
+
+    if groups.n_periods:
+        def body(carry, xs):
+            h = carry
+            slot_params, slot_caches = xs
+            ncs = []
+            for si, kind in enumerate(groups.period):
+                h, nc = apply_layer(slot_params[si], h, cfg, kind, pos=pos,
+                                    cache=slot_caches[si], shard=shard)
+                ncs.append(nc)
+            return h, ncs
+
+        x, body_caches = jax.lax.scan(body, x,
+                                      (params["body"], cache["body"]))
+        new_cache["body"] = body_caches
+
+    if groups.tail_kinds:
+        ncs = []
+        for p_l, kind, c in zip(params["tail"], groups.tail_kinds,
+                                cache["tail"]):
+            x, nc = apply_layer(p_l, x, cfg, kind, pos=pos, cache=c,
+                                shard=shard)
+            ncs.append(nc)
+        new_cache["tail"] = ncs
+
+    x = (L.layernorm(x, params["final_norm"], cfg.norm_eps)
+         if "bias" in params["final_norm"]
+         else L.rmsnorm(x, params["final_norm"], cfg.norm_eps))
+    unembed = (params["embed"].T if cfg.tie_embeddings
+               else params["unembed"])
+    logits = jnp.einsum("bsd,dv->bsv", x, unembed,
+                        preferred_element_type=jnp.float32)
+    return shard(logits, "logits"), new_cache
+
+
+def forward_logits(params: PyTree, tokens: Array, cfg: ArchConfig, *,
+                   shard=NO_SHARD) -> Array:
+    """Full-sequence logits [B,S,V] (tests + examples; training uses the
+    chunked loss instead to avoid materializing this)."""
+    b, s = tokens.shape
+    x = params["embed"][tokens]
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x = _run_layers(params, x, cfg, pos=pos, shard=shard, remat=False)
+    x = _norm(x, params["final_norm"], cfg.norm_eps)
+    unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    return jnp.einsum("bsd,dv->bsv", x, unembed,
+                      preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# parameter counting (roofline MODEL_FLOPS)
+# ---------------------------------------------------------------------------
+
+def count_params(cfg: ArchConfig, active_only: bool = False) -> int:
+    shapes = jax.eval_shape(
+        lambda k: init_params(cfg, k, jnp.float32),
+        jax.random.PRNGKey(0))
+    total = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(shapes))
+    if not active_only or cfg.moe is None:
+        return total
+    mo = cfg.moe
+    ff = mo.d_expert or cfg.d_ff
+    per_expert = 3 * cfg.d_model * ff
+    n_moe_layers = sum(1 for k in cfg.layer_kinds
+                       if _layer_uses_moe(cfg, k))
+    dead = n_moe_layers * per_expert * (mo.n_experts - mo.top_k)
+    return total - dead

@@ -1,0 +1,2 @@
+from .rules import (param_pspecs, opt_pspecs, make_shard_fn, batch_pspec,
+                    cache_pspecs, named_sharding_tree, batch_axes)

@@ -1,0 +1,274 @@
+"""Logical-axis sharding rules -> PartitionSpecs.
+
+Scheme (MaxText-style 2-D: "data" doubles as the FSDP axis, "model" is the
+tensor/expert-parallel axis, "pod" — when present — is pure DP):
+
+  params: weight matrices shard (input-dim -> "data", output/head/expert
+          dim -> "model") wherever the dim divides the axis; everything
+          else replicates. Optimizer moments inherit param specs, giving
+          ZeRO-style sharded optimizer state for free.
+  activations: batch -> ("pod","data"); heads/ffn/vocab -> "model";
+          constraints are emitted only when shapes divide (decode with
+          B=1 falls back cleanly).
+
+Every rule checks divisibility against the actual mesh, so one rule set
+serves the 16x16 pod mesh, the 2x16x16 multi-pod mesh, and tiny test
+meshes.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+# leaf-name -> trailing-dims logical roles
+#   i = input dim ("data"), o = output dim ("model"), e = experts ("model"),
+#   h = heads ("model"), . = replicated
+_PARAM_RULES: dict[tuple[str, int], str] = {
+    ("embed", 2): "oi",       # [vocab->model, d->data]
+    ("unembed", 2): "io",     # [d->data, vocab->model]
+    ("wq", 3): "ih.",
+    ("wk", 3): "ih.",
+    ("wv", 3): "ih.",
+    ("wo", 3): "h.i",
+    ("w_gate", 2): "io",
+    ("w_up", 2): "io",
+    ("w_down", 2): "oi",
+    # MoE [E, d, ff]: expert-parallel when E divides the model axis;
+    # otherwise fall back to tensor-parallel on ff (e.g. grok-1's 8 experts
+    # under a 16-way model axis)
+    ("w_gate", 3): ("ei.", ".io"),
+    ("w_up", 3): ("ei.", ".io"),
+    ("w_down", 3): ("e.i", ".oi"),
+    ("router", 2): "i.",
+    ("q_a", 2): "i.",
+    ("q_b", 3): ".h.",
+    ("kv_a", 2): "i.",
+    ("kv_b", 3): ".h.",
+    ("w_x", 2): "io",
+    ("w_y", 2): "io",
+    ("w_out", 2): "oi",
+    ("w_a", 2): ".o",
+    ("w_i", 2): ".o",
+    ("conv_w", 2): ".o",
+    ("wr", 2): "io",
+    ("wk", 2): "io",
+    ("wv", 2): "io",
+    ("wg", 2): "io",
+    ("wo", 2): "oi",
+    ("w1", 2): "i.",
+    ("w2", 2): ".i",
+    ("proj", 2): "i.",
+}
+
+_ROLE_AXIS = {"i": "data", "o": "model", "h": "model", "e": "model",
+              ".": None}
+
+
+def _axis_size(mesh: Mesh, name: str | None) -> int:
+    if name is None or name not in mesh.axis_names:
+        return 1
+    return mesh.shape[name]
+
+
+def _leaf_name(path) -> str:
+    for p in reversed(path):
+        k = getattr(p, "key", None)
+        if isinstance(k, str):
+            return k
+    return ""
+
+
+def param_pspec(path, leaf, mesh: Mesh, profile: str = "train") -> P:
+    """``profile="train"``: FSDP("data") x TP("model"), memory-optimal.
+    ``profile="serve"``: weights replicated over "data" (serving groups —
+    each data row is an independent model replica serving its own batch
+    shard), TP("model") only: no per-token FSDP weight all-gathers
+    (EXPERIMENTS.md Perf iteration 3). Callers pick "serve" only when the
+    model-sharded weights fit HBM (dryrun.build_cell checks)."""
+    name = _leaf_name(path)
+    nd = leaf.ndim
+    # norm scales / biases / 1-D leaves replicate
+    for trail in range(nd, 0, -1):
+        rules = _PARAM_RULES.get((name, trail))
+        if rules is None:
+            continue
+        if isinstance(rules, str):
+            rules = (rules,)
+        best, best_score = None, -1
+        for rule in rules:
+            specs: list[str | None] = [None] * (nd - trail)
+            score = 0
+            for dim_sz, role in zip(leaf.shape[nd - trail:], rule):
+                ax = _ROLE_AXIS[role]
+                if profile == "serve" and ax == "data":
+                    ax = None
+                if ax is not None and (ax not in mesh.axis_names
+                                       or dim_sz % _axis_size(mesh, ax)):
+                    ax = None
+                if ax is not None:
+                    score += 1
+                specs.append(ax)
+            if score > best_score:
+                best, best_score = P(*specs), score
+        return best
+    return P()
+
+
+def param_pspecs(params: PyTree, mesh: Mesh,
+                 profile: str = "train") -> PyTree:
+    """PartitionSpec tree matching ``params`` (arrays or ShapeDtypeStructs).
+    Optimizer states built with tree.map over params reuse these specs via
+    opt_pspecs."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(params),
+        [param_pspec(path, leaf, mesh, profile) for path, leaf in flat])
+
+
+def opt_pspecs(opt_state_shapes: PyTree, mesh: Mesh) -> PyTree:
+    """Specs for the optimizer state: moments named like their params (the
+    path contains the param names), quantized leaves (code/scale) shard on
+    their block axis over "data" when divisible."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(opt_state_shapes)
+    specs = []
+    for path, leaf in flat:
+        name = _leaf_name(path)
+        if name == "code":
+            # param-shaped int8 codes: inherit the param's spec exactly
+            # (path minus the trailing "code" names the param leaf)
+            specs.append(param_pspec(path[:-1], leaf, mesh))
+        elif name == "scale":
+            # param shape with the last axis reduced to n_blocks: the
+            # param rule applies and its last-dim axis is dropped if the
+            # block count no longer divides
+            spec = param_pspec(path[:-1], leaf, mesh)
+            dims = list(spec) + [None] * (leaf.ndim - len(spec))
+            if dims and dims[-1] is not None:
+                ax_names = dims[-1] if isinstance(dims[-1], tuple) \
+                    else (dims[-1],)
+                n = int(np.prod([mesh.shape[a] for a in ax_names]))
+                if leaf.shape[-1] % n:
+                    dims[-1] = None
+            specs.append(P(*dims))
+        elif name == "step":
+            specs.append(P())
+        else:
+            # strip the m/v prefix: the remaining path names the param leaf
+            specs.append(param_pspec(path, leaf, mesh))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(opt_state_shapes), specs)
+
+
+def named_sharding_tree(specs: PyTree, mesh: Mesh) -> PyTree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# -- activations -------------------------------------------------------------
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_pspec(mesh: Mesh, batch_size: int, extra_dims: int = 1) -> P:
+    """Spec for a [B, ...] batch array; shards B over pod+data if divisible."""
+    axes = batch_axes(mesh)
+    n = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    if axes and batch_size % n == 0:
+        return P(axes, *([None] * extra_dims))
+    return P(*([None] * (extra_dims + 1)))
+
+
+def make_shard_fn(mesh: Mesh):
+    """Activation-constraint callable threaded through the models."""
+    baxes = batch_axes(mesh)
+    n_b = int(np.prod([mesh.shape[a] for a in baxes])) if baxes else 1
+    n_m = _axis_size(mesh, "model")
+
+    def maybe_b(sz):
+        return baxes if baxes and sz % n_b == 0 else None
+
+    def maybe_m(sz):
+        return "model" if "model" in mesh.axis_names and sz % n_m == 0 \
+            else None
+
+    def shard(x, name):
+        s = x.shape
+        if name == "act_resid" and x.ndim == 3:
+            spec = P(maybe_b(s[0]), None, None)
+        elif name == "act_heads" and x.ndim == 4:
+            spec = P(maybe_b(s[0]), None, maybe_m(s[2]), None)
+        elif name == "act_ffn" and x.ndim == 3:
+            spec = P(maybe_b(s[0]), None, maybe_m(s[2]))
+        elif name == "attn_logits" and x.ndim == 5:
+            spec = P(maybe_b(s[0]), maybe_m(s[1]), None, None, None)
+        elif name == "attn_logits4" and x.ndim == 4:
+            # kv-replicated GQA: [B, H, Sq, Sk] shards fully on q heads
+            spec = P(maybe_b(s[0]), maybe_m(s[1]), None, None)
+        elif name == "logits" and x.ndim == 3:
+            spec = P(maybe_b(s[0]), None, maybe_m(s[2]))
+        elif name == "logits_last" and x.ndim == 2:
+            spec = P(maybe_b(s[0]), maybe_m(s[1]))
+        elif name == "moe_dispatch" and x.ndim == 3:
+            spec = P(maybe_m(s[0]), None, None)       # experts on model
+        elif name == "moe_ffn" and x.ndim == 3:
+            spec = P(maybe_m(s[0]), None, None)
+        else:
+            return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    shard.model_size = n_m      # lets layers pick kv-replicated GQA
+    return shard
+
+
+def cache_pspecs(cache: PyTree, mesh: Mesh, batch: int) -> PyTree:
+    """Decode-cache specs: batch over pod+data when divisible; KV heads /
+    rwkv heads over model when divisible; latent dims replicated."""
+    baxes = batch_axes(mesh)
+    n_b = int(np.prod([mesh.shape[a] for a in baxes])) if baxes else 1
+    n_m = _axis_size(mesh, "model")
+
+    def spec_for(path, leaf):
+        name = _leaf_name(path)
+        if name == "length":
+            return P(*([None] * leaf.ndim))
+        # find the batch dim: first dim equal to `batch` (after optional
+        # stacked period axis)
+        dims: list[Any] = [None] * leaf.ndim
+        for i, sz in enumerate(leaf.shape):
+            if sz == batch and batch % n_b == 0 and baxes:
+                dims[i] = baxes
+                break
+        if name in ("k", "v") and leaf.ndim >= 3 \
+                and "model" in mesh.axis_names:
+            if leaf.shape[-2] % n_m == 0:
+                dims[-2] = "model"              # KV heads on model
+            elif leaf.shape[-3] % n_m == 0:
+                # split-KV (flash-decoding style): when the kv-head count
+                # does not divide the model axis (GQA kv=8 under 16), shard
+                # the SEQUENCE dim instead — without this, 32k x batch
+                # caches replicate across model and overflow HBM
+                # (EXPERIMENTS.md Perf iteration 7)
+                dims[-3] = "model"
+        if name == "latent" and leaf.ndim >= 2 \
+                and "model" in mesh.axis_names \
+                and leaf.shape[-2] % n_m == 0:
+            dims[-2] = "model"                  # MLA latent: seq on model
+        if name == "k_rope" and leaf.ndim >= 3 \
+                and "model" in mesh.axis_names \
+                and leaf.shape[-3] % n_m == 0:
+            dims[-3] = "model"
+        if name == "state" and leaf.ndim >= 3:      # rwkv [.., H, hd, hd]
+            if leaf.shape[-3] % n_m == 0 and "model" in mesh.axis_names:
+                dims[-3] = "model"
+        return P(*dims)
+
+    flat, _ = jax.tree_util.tree_flatten_with_path(cache)
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(cache),
+        [spec_for(p, l) for p, l in flat])

@@ -1,0 +1,5 @@
+from .optimizer import OptConfig, init_opt_state, apply_updates, opt_state_specs
+from .train_step import make_train_step, make_eval_step
+from .serve_step import make_prefill_step, make_decode_step, greedy_generate
+from .checkpoint import CheckpointManager
+from .fault_tolerance import ResilientLoop, StragglerMonitor, remesh

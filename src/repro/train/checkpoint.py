@@ -1,0 +1,110 @@
+"""Fault-tolerant checkpointing: atomic, resumable, retention-managed.
+
+Design for the 1000+-node posture (DESIGN.md section 6):
+  * save is write-to-temp + atomic rename (a crashed save never corrupts
+    the latest checkpoint);
+  * the manifest records step, data cursor, and RNG so restore resumes the
+    exact stream position (synthetic_stream is a pure function of the
+    cursor);
+  * retention keeps the newest K checkpoints;
+  * arrays are stored host-side .npz per pytree leaf path — mesh-shape
+    agnostic, so an elastic restart onto a different mesh re-shards on
+    device_put (see fault_tolerance.remesh).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import tempfile
+from typing import Any
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+def _flatten(tree: PyTree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def _unflatten_into(tree: PyTree, flat: dict[str, np.ndarray]) -> PyTree:
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    new = []
+    for path, leaf in leaves:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = flat[key]
+        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+        new.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(tree), new)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:010d}")
+
+    def save(self, step: int, params: PyTree, opt_state: PyTree,
+             extra: dict | None = None) -> str:
+        tmp = tempfile.mkdtemp(dir=self.dir, prefix=".tmp_")
+        try:
+            np.savez(os.path.join(tmp, "params.npz"), **_flatten(params))
+            np.savez(os.path.join(tmp, "opt_state.npz"),
+                     **_flatten(opt_state))
+            manifest = {"step": step, **(extra or {})}
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            final = self._step_dir(step)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)            # atomic publish
+        except BaseException:
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
+        self._retain()
+        return self._step_dir(step)
+
+    def _retain(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    def all_steps(self) -> list[int]:
+        out = []
+        for d in os.listdir(self.dir):
+            m = re.fullmatch(r"step_(\d+)", d)
+            if m and os.path.exists(os.path.join(self.dir, d,
+                                                 "manifest.json")):
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, params_like: PyTree, opt_like: PyTree,
+                step: int | None = None
+                ) -> tuple[PyTree, PyTree, dict]:
+        step = step if step is not None else self.latest_step()
+        assert step is not None, "no checkpoint available"
+        d = self._step_dir(step)
+        with np.load(os.path.join(d, "params.npz")) as z:
+            params = _unflatten_into(params_like, dict(z))
+        with np.load(os.path.join(d, "opt_state.npz")) as z:
+            opt = _unflatten_into(opt_like, dict(z))
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        return params, opt, manifest

@@ -1,0 +1,71 @@
+"""Training step factory: microbatched grad accumulation + AdamW.
+
+Microbatching (``lax.scan`` over the leading microbatch axis) bounds
+activation memory at large model scale: per-layer remat checkpoints are
+held for one microbatch at a time. Gradients accumulate in f32.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.model import NO_SHARD, train_forward
+from .optimizer import OptConfig, apply_updates
+
+PyTree = Any
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: OptConfig, *,
+                    shard=NO_SHARD, remat: bool = True
+                    ) -> Callable:
+    """Returns ``train_step(params, opt_state, batch)``.
+
+    ``batch`` arrays carry a leading microbatch axis: [n_micro, B_micro, ...]
+    (n_micro=1 for small archs). The returned metrics include the mean loss.
+    """
+
+    def micro_grads(params, micro):
+        loss, grads = jax.value_and_grad(
+            lambda p: train_forward(p, micro, cfg, shard=shard,
+                                    remat=remat))(params)
+        return loss, grads
+
+    def train_step(params, opt_state, batch):
+        n_micro = jax.tree.leaves(batch)[0].shape[0]
+
+        if n_micro == 1:
+            micro = jax.tree.map(lambda a: a[0], batch)
+            loss, grads = micro_grads(params, micro)
+        else:
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def body(carry, micro):
+                loss_acc, gacc = carry
+                loss, grads = micro_grads(params, micro)
+                gacc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), gacc, grads)
+                return (loss_acc + loss, gacc), None
+
+            (loss_sum, gsum), _ = jax.lax.scan(body, (jnp.float32(0), zero),
+                                               batch)
+            loss = loss_sum / n_micro
+            grads = jax.tree.map(lambda g: g / n_micro, gsum)
+
+        params, opt_state, opt_metrics = apply_updates(
+            params, grads, opt_state, opt_cfg)
+        metrics = {"loss": loss, **opt_metrics}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ArchConfig, *, shard=NO_SHARD) -> Callable:
+    def eval_step(params, batch):
+        micro = jax.tree.map(lambda a: a[0], batch)
+        return train_forward(params, micro, cfg, shard=shard, remat=False)
+    return eval_step

@@ -1,0 +1,53 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.grid import box_count, build_cell_grid, choose_grid_spec
+
+
+def _points(rng, n):
+    return rng.random((n, 3)).astype(np.float32)
+
+
+def test_build_no_overflow_with_planned_capacity(rng):
+    pts = _points(rng, 2000)
+    spec = choose_grid_spec(pts, radius=0.1)
+    grid = build_cell_grid(jnp.asarray(pts), spec)
+    assert int(grid.overflow) == 0
+    assert int(grid.counts.sum()) == 2000
+
+
+def test_every_point_in_its_cell(rng):
+    pts = _points(rng, 500)
+    spec = choose_grid_spec(pts, radius=0.15)
+    grid = build_cell_grid(jnp.asarray(pts), spec)
+    dense = np.asarray(grid.dense)
+    ccoord = np.asarray(spec.cell_of(jnp.asarray(pts)))
+    for idx in range(0, 500, 37):
+        cx, cy, cz = ccoord[idx]
+        assert idx in dense[cx, cy, cz], (idx, ccoord[idx])
+
+
+@given(st.integers(10, 400), st.integers(0, 2**31 - 1))
+@settings(deadline=None, max_examples=15)
+def test_sat_box_count_matches_brute(n, seed):
+    rng = np.random.default_rng(seed)
+    pts = _points(rng, n)
+    spec = choose_grid_spec(pts, radius=0.2)
+    grid = build_cell_grid(jnp.asarray(pts), spec)
+    ccoord = np.asarray(spec.cell_of(jnp.asarray(pts)))
+    lo = jnp.asarray([[1, 1, 1]], jnp.int32)
+    hi = jnp.asarray([[3, 2, 4]], jnp.int32)
+    got = int(box_count(grid.sat, lo, hi)[0])
+    want = int(np.sum(np.all((ccoord >= [1, 1, 1]) & (ccoord <= [3, 2, 4]),
+                             axis=1)))
+    assert got == want
+
+
+def test_capacity_overflow_reported(rng):
+    pts = np.zeros((50, 3), np.float32)  # all in one cell
+    spec = choose_grid_spec(pts, radius=0.1, capacity=8)
+    grid = build_cell_grid(jnp.asarray(pts), spec)
+    assert int(grid.overflow) == 42
+    assert int(grid.counts.max()) == 8

@@ -1,0 +1,40 @@
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.morton import morton_decode, morton_encode
+from repro.core.types import GridSpec
+
+
+@given(st.lists(st.tuples(st.integers(0, 1023), st.integers(0, 1023),
+                          st.integers(0, 1023)), min_size=1, max_size=64))
+@settings(deadline=None, max_examples=30)
+def test_roundtrip(coords):
+    c = jnp.asarray(coords, jnp.int32)
+    dec = morton_decode(morton_encode(c))
+    assert jnp.array_equal(dec, c)
+
+
+def test_locality_order():
+    """Morton order of a raster grid puts 2x2x2 octants contiguously."""
+    coords = jnp.stack(jnp.meshgrid(*[jnp.arange(4)] * 3, indexing="ij"),
+                       -1).reshape(-1, 3)
+    codes = np.asarray(morton_encode(coords))
+    order = np.argsort(codes)
+    first8 = set(map(tuple, np.asarray(coords)[order[:8]].tolist()))
+    assert first8 == {(x, y, z) for x in (0, 1) for y in (0, 1)
+                      for z in (0, 1)}
+
+
+def test_monotone_per_axis():
+    a = morton_encode(jnp.asarray([[1, 2, 3]]))
+    b = morton_encode(jnp.asarray([[1, 2, 4]]))
+    assert int(a[0]) < int(b[0])
+
+
+def test_spec_cell_of_clips():
+    spec = GridSpec(origin=(0., 0., 0.), cell_size=0.1, dims=(4, 4, 4),
+                    capacity=4)
+    pos = jnp.asarray([[-1., 0.05, 99.]])
+    c = spec.cell_of(pos)
+    assert c.tolist() == [[0, 0, 3]]

@@ -1,0 +1,114 @@
+"""Multi-device tests (subprocess: jax device count is locked at first
+init, so each test spawns a fresh interpreter with 8 host devices)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ENV = {**os.environ, "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+       "PYTHONPATH": os.path.join(os.path.dirname(__file__), "..", "src")}
+
+
+def _run(code: str):
+    r = subprocess.run([sys.executable, "-c", code], env=ENV,
+                       capture_output=True, text=True, timeout=560)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+def test_distributed_search_exact():
+    out = _run("""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core.distributed import distributed_neighbor_search
+from repro.core.types import SearchParams
+from repro.kernels.ref import brute_force_search
+rng = np.random.default_rng(3)
+pts = rng.random((4000, 3)).astype(np.float32)
+qs = rng.random((900, 3)).astype(np.float32)
+r, K = 0.07, 8
+mesh = jax.make_mesh((4, 2), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+res = distributed_neighbor_search(mesh, pts, qs, SearchParams(radius=r, k=K))
+oi, od, oc = brute_force_search(jnp.asarray(pts), jnp.asarray(qs), r, K)
+assert np.array_equal(np.asarray(oi), np.asarray(res.indices))
+assert np.array_equal(np.asarray(oc), np.asarray(res.counts))
+print("EXACT-MATCH")
+""")
+    assert "EXACT-MATCH" in out
+
+
+def test_sharded_train_step_matches_single_device():
+    """The pjit'd train step on a 4x2 mesh must produce the same loss as the
+    unsharded step (same math, different partitioning)."""
+    out = _run("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import smoke_config
+from repro.data.pipeline import make_batch
+from repro.models.config import get_config
+from repro.models.model import init_params
+from repro.sharding.rules import (param_pspecs, opt_pspecs, make_shard_fn,
+                                  named_sharding_tree)
+from repro.train.optimizer import OptConfig, init_opt_state
+from repro.train.train_step import make_train_step
+from repro.launch.mesh import make_test_mesh
+
+cfg = smoke_config(get_config("grok-1-314b"))   # MoE path under sharding
+key = jax.random.PRNGKey(0)
+params = init_params(cfg, key)
+opt_cfg = OptConfig(lr=1e-3, warmup_steps=1)
+opt = init_opt_state(params, opt_cfg)
+batch = make_batch(cfg, 8, 16, key)
+batch = jax.tree.map(lambda a: a[None], batch)
+
+ref_step = jax.jit(make_train_step(cfg, opt_cfg))
+_, _, m_ref = ref_step(params, opt, batch)
+
+mesh = make_test_mesh((4, 2), ("data", "model"))
+shard = make_shard_fn(mesh)
+p_sh = named_sharding_tree(param_pspecs(params, mesh), mesh)
+o_sh = named_sharding_tree(opt_pspecs(jax.eval_shape(lambda p: init_opt_state(p, opt_cfg), params), mesh), mesh)
+with mesh:
+    sh_step = jax.jit(make_train_step(cfg, opt_cfg, shard=shard),
+                      in_shardings=(p_sh, o_sh, None),
+                      out_shardings=(p_sh, o_sh, None))
+    p2, o2, m_sh = sh_step(params, opt, batch)
+a, b = float(m_ref["loss"]), float(m_sh["loss"])
+assert abs(a - b) < 1e-3, (a, b)
+print("LOSS-MATCH", a, b)
+""")
+    assert "LOSS-MATCH" in out
+
+
+def test_production_mesh_shapes():
+    out = _run("""
+import numpy as np
+import jax
+from repro.launch.mesh import make_production_mesh
+# only 8 devices here: expect the helpful error for the 256-chip mesh
+try:
+    make_production_mesh()
+    print("UNEXPECTED-OK")
+except RuntimeError as e:
+    assert "xla_force_host_platform_device_count" in str(e)
+    print("GUARDED")
+""")
+    assert "GUARDED" in out
+
+
+def test_remesh_elastic():
+    out = _run("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.launch.mesh import make_test_mesh
+from repro.train.fault_tolerance import remesh
+x = {"w": jnp.arange(32, dtype=jnp.float32).reshape(8, 4)}
+mesh_a = make_test_mesh((8,), ("data",))
+mesh_b = make_test_mesh((4,), ("data",))
+specs = {"w": P("data", None)}
+xa = remesh(x, mesh_a, specs)
+xb = remesh(xa, mesh_b, specs)
+assert np.array_equal(np.asarray(xb["w"]), np.arange(32).reshape(8, 4))
+print("REMESH-OK")
+""")
+    assert "REMESH-OK" in out

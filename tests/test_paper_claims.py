@@ -1,0 +1,96 @@
+"""Deterministic proxies for the paper's section 3.2/6.3 claims.
+
+Wall-clock claims are hardware-specific; here we assert the *work-count*
+mechanisms behind them, which are deterministic on any backend:
+  Obs. 2 / Fig. 8: Step-2 candidate tests grow superlinearly with window
+  width; partitioning shrinks them.  Scheduling claim (Obs. 1): Morton
+  ordering raises the adjacent-query cell-sharing statistic (the coherence
+  the paper measures via cache hit rates).
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (NeighborSearch, SearchOpts, SearchParams,
+                        build_cell_grid, choose_grid_spec,
+                        coherence_statistic, schedule_queries)
+from repro.core.search import window_search
+from repro.data.pointclouds import kitti_like_cloud, uniform_cloud
+
+
+def _candidate_count(pts, qs, w, cell=0.05):
+    """Number of Step-2 (sphere-test) candidates a window search touches —
+    the TPU analogue of the paper's IS-call count (Fig. 8)."""
+    spec = choose_grid_spec(pts, radius=cell, cell_size=cell)
+    grid = build_cell_grid(jnp.asarray(pts), spec)
+    ccoord = spec.cell_of(jnp.asarray(qs))
+    from repro.core.grid import box_count, clamp_box
+    lo, hi = clamp_box(spec, ccoord, w)
+    return int(jnp.sum(box_count(grid.sat, lo, hi)))
+
+
+def test_candidates_grow_superlinearly_with_window(rng):
+    """Fig. 8: IS calls grow ~cubically with AABB width."""
+    pts = rng.random((20000, 3)).astype(np.float32)
+    qs = rng.random((500, 3)).astype(np.float32)
+    counts = [_candidate_count(pts, qs, w) for w in (1, 2, 4)]
+    assert counts[1] > counts[0] * 2           # superlinear
+    assert counts[2] > counts[1] * 2
+    # cubic-ish: doubling w (~doubling width) ~8x volume; allow slack for
+    # boundary clamping
+    assert counts[2] / counts[0] > 8
+
+
+def test_partitioning_reduces_candidates(rng):
+    """Section 5.1: per-partition windows do less Step-2 work than the
+    monolithic full-radius window."""
+    pts = rng.random((20000, 3)).astype(np.float32)
+    qs = rng.random((1000, 3)).astype(np.float32)
+    params = SearchParams(radius=0.3, k=8)
+    ns = NeighborSearch(pts, params, SearchOpts(partition=True))
+    ns.query(qs)
+    w_full = ns.statics.w_full
+    # work proxy: queries x candidate-window volume, partitioned vs
+    # monolithic (the determinant of Step-2 work, Observation 2)
+    vol_part = sum(b.count * (2 * b.w_search + 1) ** 3
+                   for b in ns.report.bundles)
+    vol_full = len(qs) * (2 * w_full + 1) ** 3
+    assert vol_part < vol_full * 0.7, (vol_part, vol_full)
+
+
+def test_scheduling_improves_coherence(rng):
+    """Obs. 1 proxy: Morton scheduling raises adjacent-query cell sharing."""
+    pts = kitti_like_cloud(5000, seed=1)
+    qs = kitti_like_cloud(4000, seed=2)
+    rng.shuffle(qs)
+    spec = choose_grid_spec(pts, radius=0.05)
+    before = float(coherence_statistic(spec, jnp.asarray(qs)))
+    perm, _ = schedule_queries(spec, jnp.asarray(qs))
+    after = float(coherence_statistic(spec, jnp.asarray(qs)[perm]))
+    assert after > max(5 * before, before + 0.1), (before, after)
+
+
+def test_skip_sphere_test_is_correct_not_just_fast(rng):
+    """Range-search skip-test (section 5.1): candidates inside an
+    r-inscribed megacell are within r by construction."""
+    pts = rng.random((5000, 3)).astype(np.float32)
+    qs = rng.random((500, 3)).astype(np.float32)
+    r = 0.25
+    params = SearchParams(radius=r, k=8, mode="range")
+    # bundling may legitimately merge skip/no-skip partitions (cost-model
+    # choice); disable it so the skip-test path itself is exercised
+    ns = NeighborSearch(pts, params, SearchOpts(bundle=False))
+    res = ns.query(qs)
+    skip_bundles = [b for b in ns.report.bundles if b.skip_test]
+    assert skip_bundles, "expected at least one skip-test bundle"
+    d = np.asarray(res.distances2)
+    assert (d[np.isfinite(d)] <= r * r + 1e-6).all()
+
+
+def test_build_time_linear_proxy(rng):
+    """Fig. 15 proxy: grid build work is O(N) — measured as the structure
+    size actually written, which scales linearly in points."""
+    for n in (1000, 2000, 4000):
+        pts = rng.random((n, 3)).astype(np.float32)
+        spec = choose_grid_spec(pts, radius=0.1)
+        grid = build_cell_grid(jnp.asarray(pts), spec)
+        assert int(grid.counts.sum()) == n

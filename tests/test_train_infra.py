@@ -1,0 +1,180 @@
+"""Training infrastructure: optimizer, checkpoint/restart determinism,
+fault injection, straggler monitor, data-stream resumability."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.data.pipeline import make_batch, synthetic_stream
+from repro.models.config import get_config
+from repro.models.model import init_params
+from repro.train.checkpoint import CheckpointManager
+from repro.train.fault_tolerance import ResilientLoop, StragglerMonitor
+from repro.train.optimizer import (OptConfig, _qdecode, _qencode,
+                                   apply_updates, init_opt_state)
+from repro.train.train_step import make_train_step
+
+KEY = jax.random.PRNGKey(0)
+CFG = smoke_config(get_config("qwen1.5-110b"))
+
+
+def _setup(opt_cfg=None):
+    opt_cfg = opt_cfg or OptConfig(lr=1e-2, warmup_steps=1)
+    params = init_params(CFG, KEY)
+    opt = init_opt_state(params, opt_cfg)
+    step = jax.jit(make_train_step(CFG, opt_cfg))
+    return params, opt, step, opt_cfg
+
+
+def _batch(step=0, n_micro=1, b=4, s=16):
+    key = jax.random.fold_in(KEY, step)
+    batch = make_batch(CFG, b, s, key)
+    return jax.tree.map(
+        lambda a: a.reshape((n_micro, b // n_micro) + a.shape[1:]), batch)
+
+
+def test_loss_decreases():
+    params, opt, step, _ = _setup()
+    losses = []
+    batch = _batch()
+    for i in range(15):
+        params, opt, m = step(params, opt, batch)  # overfit one batch
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] * 0.8, losses
+
+
+def test_microbatch_equivalence():
+    """grad accumulation over 4 microbatches == single big batch step."""
+    params, opt, step, opt_cfg = _setup()
+    p1, o1, m1 = step(params, opt, _batch(n_micro=1))
+    p4, o4, m4 = step(params, opt, _batch(n_micro=4))
+    np.testing.assert_allclose(float(m1["loss"]), float(m4["loss"]),
+                               rtol=1e-5)
+    # fp reassociation of accumulated grads is amplified by Adam's
+    # 1/sqrt(v) where v is tiny -> loose elementwise tolerance
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p4)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-3)
+
+
+def test_quantized_moments_roundtrip():
+    x = jax.random.normal(KEY, (1000,)) * 0.03
+    q = _qencode(x)
+    y = _qdecode(q, x.shape)
+    # absmax int8: error bounded by half a quantization step per block
+    step = float(np.max(np.asarray(q["scale"])))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x),
+                               atol=0.51 * step + 1e-7)
+    assert q["code"].dtype == jnp.int8
+
+
+def test_quantized_sqrt_moments_bounded():
+    from repro.train.optimizer import _qdecode_sqrt, _qencode_sqrt
+    v = jnp.abs(jax.random.normal(KEY, (1000,))) * 1e-4
+    v = v.at[::7].set(1e-12)      # tiny second moments inside the block
+    q = _qencode_sqrt(v)
+    y = _qdecode_sqrt(q, v.shape)
+    # decode floor: no zero-collapse (the update-explosion guard)
+    assert float(jnp.min(y)) > 0
+    big = np.asarray(v) > 1e-6
+    np.testing.assert_allclose(np.asarray(y)[big], np.asarray(v)[big],
+                               rtol=0.2)
+
+
+def test_quantized_adam_tracks_fp32():
+    cfg_q = OptConfig(lr=1e-2, warmup_steps=1, quantize_moments=True)
+    params, opt_f, step_f, _ = _setup()
+    opt_q = init_opt_state(params, cfg_q)
+    step_q = jax.jit(make_train_step(CFG, cfg_q))
+    b = _batch()
+    pf, qf = params, params
+    of, oq = opt_f, opt_q
+    for i in range(5):
+        pf, of, mf = step_f(pf, of, b)
+        qf, oq, mq = step_q(qf, oq, b)
+    assert abs(float(mf["loss"]) - float(mq["loss"])) < 0.15
+
+
+def test_grad_clip_engages():
+    params, opt, _, _ = _setup()
+    big = jax.tree.map(lambda p: jnp.ones_like(p) * 1e3, params)
+    cfg = OptConfig(lr=1e-2, grad_clip=1.0, warmup_steps=1)
+    p2, o2, m = apply_updates(params, big, opt, cfg)
+    assert float(m["grad_norm"]) > 1.0
+    # update magnitude bounded by lr * (1 + wd-ish): clip engaged
+    delta = max(float(jnp.max(jnp.abs(a - b)))
+                for a, b in zip(jax.tree.leaves(p2),
+                                jax.tree.leaves(params)))
+    assert delta < 0.2
+
+
+def test_checkpoint_roundtrip_and_retention(tmp_path):
+    params, opt, step, _ = _setup()
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (10, 20, 30):
+        mgr.save(s, params, opt, extra={"cursor": s})
+    assert mgr.all_steps() == [20, 30]   # retention pruned step 10
+    p2, o2, man = mgr.restore(params, opt)
+    assert man["step"] == 30
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_resume_determinism(tmp_path):
+    """train 6 straight == train 3, checkpoint, restore, train 3."""
+    params, opt, step, _ = _setup()
+
+    pa, oa = params, opt
+    for s in range(6):
+        pa, oa, ma = step(pa, oa, _batch(step=s))
+
+    pb, ob = params, opt
+    for s in range(3):
+        pb, ob, mb = step(pb, ob, _batch(step=s))
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(3, pb, ob)
+    pc, oc, _ = mgr.restore(pb, ob)
+    for s in range(3, 6):
+        pc, oc, mc = step(pc, oc, _batch(step=s))
+    np.testing.assert_allclose(float(ma["loss"]), float(mc["loss"]),
+                               rtol=1e-6)
+
+
+def test_resilient_loop_recovers_from_failure(tmp_path):
+    params, opt, step, _ = _setup()
+    mgr = CheckpointManager(str(tmp_path))
+    fail_at = {"n": 7}
+    calls = {"n": 0}
+
+    def flaky_step(p, o, b):
+        calls["n"] += 1
+        if calls["n"] == fail_at["n"]:
+            raise RuntimeError("injected node failure")
+        return step(p, o, b)
+
+    def stream_fn(start):
+        return (_batch(step=s) for s in range(start, 10_000))
+
+    loop = ResilientLoop(mgr, save_every=2, max_restarts=2)
+    p, o, log = loop.run(flaky_step, params, opt, stream_fn, n_steps=10)
+    assert loop.restarts == 1
+    assert len(log) == 10          # all 10 steps eventually completed
+
+
+def test_straggler_monitor():
+    mon = StragglerMonitor(factor=3.0)
+    for _ in range(10):
+        assert not mon.observe(0.1)
+    assert mon.observe(1.0)        # 10x the EMA -> flagged
+    assert mon.flagged == 1
+    assert not mon.observe(0.1)    # EMA not polluted by the straggler
+
+
+def test_stream_resumable():
+    a = list(zip(range(3), synthetic_stream(CFG, 2, 8, start_step=2)))
+    b = list(zip(range(3), synthetic_stream(CFG, 2, 8, start_step=2)))
+    for (_, x), (_, y) in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x["tokens"]),
+                                      np.asarray(y["tokens"]))
