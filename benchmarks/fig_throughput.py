@@ -1,0 +1,114 @@
+"""Executor throughput: legacy per-bundle host loop vs device-resident
+QueryExecutor on Fig. 11-style workloads.
+
+Measures steady-state end-to-end ``query()`` latency (plan/compile caches
+warm — the SPH-stepping regime) plus the dispatch/sync counts that explain
+it, asserts the two paths return oracle-identical results, and writes the
+rows to ``BENCH_executor.json`` at the repo root so the perf trajectory
+accumulates across PRs.
+
+``REPRO_BENCH_SMOKE=1`` shrinks the workloads for CI (scripts/ci.sh).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from repro.core import NeighborSearch, SearchOpts, SearchParams
+from repro.data.pointclouds import dataset_by_name
+
+from .common import emit
+
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE", "0") == "1"
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_executor.json")
+
+
+def _paired_timeit(fn_a, fn_b, repeats: int = 5):
+    """Interleaved best-of timing: alternating A/B runs so machine noise
+    (shared CPU) hits both paths equally instead of biasing whichever ran
+    in the quieter window."""
+    import time
+
+    import jax
+
+    ts_a, ts_b = [], []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_a())
+        ts_a.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_b())
+        ts_b.append(time.perf_counter() - t0)
+    return min(ts_a), min(ts_b)
+
+
+def _assert_identical(a, b):
+    assert np.array_equal(np.asarray(a.indices), np.asarray(b.indices))
+    assert np.array_equal(np.asarray(a.counts), np.asarray(b.counts))
+    da = np.where(np.isinf(np.asarray(a.distances2)), -1.0,
+                  np.asarray(a.distances2))
+    db = np.where(np.isinf(np.asarray(b.distances2)), -1.0,
+                  np.asarray(b.distances2))
+    assert np.array_equal(da, db)
+
+
+def run(k=8):
+    if SMOKE:
+        cases = [("kitti-stream-512", "kitti", 8_000, 512, 0.04, 128)]
+    else:
+        # batch cases: Fig. 11 regimes (kernel-bound; the executor must not
+        # regress). stream cases: small repeated batches, the serving/SPH
+        # steady state where host orchestration is a visible fraction and
+        # the one-sync compiled schedule pays off.
+        cases = [
+            ("kitti-40k", "kitti", 40_000, 5_000, 0.02, 256),
+            ("scan-30k", "scan", 30_000, 5_000, 0.03, 256),
+            ("nbody-30k", "nbody", 30_000, 5_000, 0.03, 256),
+            ("kitti-stream-512", "kitti", 8_000, 512, 0.04, 128),
+            ("nbody-stream-512", "nbody", 8_000, 512, 0.04, 128),
+        ]
+    results = {}
+    for name, kind, n, nq, r, tile in cases:
+        pts = dataset_by_name(kind, n, seed=1)
+        qs = dataset_by_name(kind, nq, seed=2)
+        params = SearchParams(radius=r, k=k)
+
+        ns_old = NeighborSearch(pts, params,
+                                SearchOpts(executor=False, query_tile=tile))
+        res_old = ns_old.query(qs)                       # warm jit caches
+        ns_new = NeighborSearch(pts, params, SearchOpts(query_tile=tile))
+        ns_new.executor.warmup(qs)
+        res_new = ns_new.query(qs)
+        _assert_identical(res_old, res_new)
+        t_old, t_new = _paired_timeit(lambda: ns_old.query(qs),
+                                      lambda: ns_new.query(qs),
+                                      repeats=3 if SMOKE else 7)
+        st = ns_new.executor.stats()
+
+        row = {
+            "old_us": t_old * 1e6,
+            "new_us": t_new * 1e6,
+            "speedup": t_old / t_new,
+            "bundles": len(ns_new.report.bundles),
+            "launches_old": ns_old.report.launches,
+            "launches_new": ns_new.report.launches,
+            "host_syncs_old": ns_old.report.host_syncs,
+            "host_syncs_new": ns_new.report.host_syncs,
+            "steady_state_compilations": st["last"]["compilations"],
+            "plan_cache_hit": st["last"]["plan_cache_hit"],
+        }
+        results[name] = row
+        emit(f"figtp/{name}/host_loop", t_old / nq,
+             f"launches={row['launches_old']};"
+             f"host_syncs={row['host_syncs_old']}")
+        emit(f"figtp/{name}/executor", t_new / nq,
+             f"launches={row['launches_new']};host_syncs=1;"
+             f"speedup={row['speedup']:.2f}x")
+
+    with open(OUT_PATH, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return results

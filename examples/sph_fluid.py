@@ -79,6 +79,8 @@ def main():
         dt = time.perf_counter() - t0
         print(f"step {s}: mean_density={rho:9.1f} "
               f"partitions={ns.report.num_partitions} "
+              f"launches={ns.report.launches} "
+              f"syncs={ns.report.host_syncs} "
               f"wall={dt:.2f}s")
     assert np.isfinite(np.asarray(pos)).all()
     print("ok")

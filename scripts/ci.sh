@@ -1,0 +1,13 @@
+#!/usr/bin/env bash
+# One-command local/CI gate: tier-1 tests + executor smoke benchmark.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q
+
+# smoke the executor benchmark (shrunken workloads; asserts the executor
+# path is oracle-identical to the host loop and writes BENCH_executor.json)
+REPRO_BENCH_SMOKE=1 python -m benchmarks.run figtp
+
+echo "ci.sh: OK"

@@ -17,8 +17,10 @@ from .partition import (MegacellStatics, Partition, PartitionPlan,
                         compute_megacells, megacell_statics, plan_partitions)
 from .bundle import Bundle, CostModel, calibrate, exhaustive_best, plan_bundles
 from .search import NeighborSearch, neighbor_search, window_search
+from .executor import QueryExecutor
 
 __all__ = [
+    "QueryExecutor",
     "Array", "CellGrid", "GridSpec", "SearchOpts", "SearchParams",
     "SearchResult", "build_cell_grid", "choose_grid_spec", "box_count",
     "morton_encode", "morton_decode", "morton_argsort", "schedule_queries",

@@ -71,6 +71,16 @@ def _mk_bundle(parts: Sequence[Partition], idxs: Sequence[int],
                   count=sum(p.count for p in ms))
 
 
+def bundle_query_sel(plan, bundle: Bundle) -> np.ndarray:
+    """Scheduled-order query positions of a bundle's member partitions,
+    concatenated (shared by the executor's launch grouping and the legacy
+    host loop so both paths stay bit-identical)."""
+    return np.concatenate([
+        plan.perm[p.start:p.start + p.count]
+        for p in (plan.partitions[i] for i in bundle.members)
+    ])
+
+
 def bundle_cost(bundle: Bundle, parts: Sequence[Partition], model: CostModel,
                 *, n_points: int, cell_size: float, mode: str,
                 k: int) -> float:

@@ -31,6 +31,15 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+# jax >= 0.5 promotes shard_map to jax.shard_map and renames the replication
+# check kwarg check_rep -> check_vma; this repo must run on both.
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+    _SHARD_MAP_KW = {"check_vma": False}
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _SHARD_MAP_KW = {"check_rep": False}
+
 from .grid import build_cell_grid
 from .search import window_search
 from .types import GridSpec, SearchParams, SearchResult
@@ -221,8 +230,8 @@ def make_distributed_search(mesh: Mesh, plan: SlabPlan,
     out_specs = (P(slab_axis, query_axis, None, None),
                  P(slab_axis, query_axis, None, None),
                  P(slab_axis, query_axis, None))
-    fn = jax.shard_map(local_fn, mesh=mesh, in_specs=in_specs,
-                       out_specs=out_specs, check_vma=False)
+    fn = _shard_map(local_fn, mesh=mesh, in_specs=in_specs,
+                    out_specs=out_specs, **_SHARD_MAP_KW)
     return jax.jit(fn)
 
 

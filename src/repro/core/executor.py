@@ -1,0 +1,339 @@
+"""Device-resident bundle executor (DESIGN.md section 3).
+
+The legacy orchestrator (``NeighborSearch._query_host_loop``) ran a Python
+loop over bundles with a blocking ``jax.device_get`` + numpy scatter per
+bundle — giving back on the host most of what scheduling/partitioning won
+on the device, exactly the naive-mapping overhead the paper warns about.
+The executor keeps the whole execution phase device-resident:
+
+  * **signature batching** — bundles sharing a static launch signature
+    ``(w_search, skip_test, padded-N bucket)`` are folded into one padded
+    launch with concatenated segment metadata, so B bundles become
+    ~|unique signatures| dispatches instead of B;
+  * **async dispatch + on-device scatter** — the whole launch schedule
+    (per group: gather -> padded search -> scatter through the composed
+    schedule∘partition permutation with ``.at[].set``) runs as ONE jitted
+    program on the jnp path, and as a loop of non-blocking dispatches on
+    the Pallas path. No per-bundle ``device_get``, no numpy scatter;
+  * **one-sync contract** — exactly ONE blocking host sync materializes
+    the results (``jax.block_until_ready`` over the three output arrays).
+    The only other host transfer is the *plan fetch*: one fused
+    ``device_get`` of the per-query partition metadata (w_search / skip /
+    rho, plus query cells on the Pallas path) that data-dependent
+    partitioning requires, mirroring the paper's host-side launch
+    orchestration. Both are counted in ``stats()``;
+  * **plan + compile caching** — host partition/bundle plans are cached
+    by value fingerprint and compiled searchers are cached per launch
+    signature (the jit cache does the compiling; the executor tracks
+    first-seen signatures and jit cache sizes so ``stats()`` can prove a
+    steady-state query recompiles nothing).
+"""
+from __future__ import annotations
+
+import collections
+import hashlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .bundle import bundle_query_sel
+from .partition import (PartitionPlan, compute_megacells, plan_partitions,
+                        trivial_plan)
+from .types import Array, SearchResult
+
+_PLAN_CACHE_MAX = 32
+_LAUNCHER_CACHE_MAX = 32
+
+
+def _fingerprint(*arrays: np.ndarray) -> bytes:
+    h = hashlib.sha1()
+    for a in arrays:
+        h.update(np.ascontiguousarray(a).tobytes())
+    return h.digest()
+
+
+class LaunchGroup:
+    """One padded device launch covering every bundle of one signature."""
+
+    __slots__ = ("w_search", "skip_test", "sel", "pad_n", "n_bundles")
+
+    def __init__(self, w_search: int, skip_test: bool, sel: np.ndarray,
+                 pad_n: int, n_bundles: int):
+        self.w_search = w_search
+        self.skip_test = skip_test
+        self.sel = sel              # scheduled-order query positions
+        self.pad_n = pad_n
+        self.n_bundles = n_bundles
+
+
+class QueryExecutor:
+    """Executes a ``NeighborSearch``'s bundle plan device-resident.
+
+    Owned by the search object (``ns.executor``); reusable across queries —
+    steady-state repeated queries hit the plan cache and compile nothing.
+    Surface: ``execute()`` (called by ``NeighborSearch.query``),
+    ``warmup()``, ``stats()``.
+    """
+
+    def __init__(self, ns):
+        self.ns = ns
+        self._plan_cache: collections.OrderedDict = collections.OrderedDict()
+        self._launcher_cache: collections.OrderedDict = \
+            collections.OrderedDict()
+        self._signatures: set = set()
+        self._totals = collections.Counter()
+        self._last: dict = {}
+
+    # -- planning -----------------------------------------------------------
+
+    def _plan(self, queries_s: Array):
+        """Fetch partition metadata (ONE fused device_get), then plan and
+        group on host — or reuse a cached plan for this fingerprint."""
+        ns = self.ns
+        nq = queries_s.shape[0]
+        need_cells = ns.opts.use_pallas
+        partitioned = ns.opts.partition and ns.statics.has_megacells
+
+        fetch = []
+        if partitioned:
+            w_dev, s_dev, r_dev = compute_megacells(
+                ns.grid, queries_s, ns.statics, ns.params)
+            fetch += [w_dev, s_dev, r_dev]
+        if need_cells:
+            fetch.append(ns.spec.cell_of(queries_s))
+        if fetch:
+            fetched = [np.asarray(a) for a in jax.device_get(tuple(fetch))]
+            self._last["plan_fetches"] += 1
+        qcells = fetched.pop() if need_cells else None
+
+        if partitioned:
+            w_np, s_np, r_np = fetched[:3]
+            key = (nq, _fingerprint(w_np, s_np, r_np))
+        else:
+            key = (nq, b"nopart")
+
+        hit = self._plan_cache.get(key)
+        if hit is not None:
+            self._plan_cache.move_to_end(key)
+            self._last["plan_cache_hit"] = True
+            plan, bundles, groups = hit
+            return plan, bundles, groups, qcells
+
+        plan = (plan_partitions(w_np, s_np, r_np, ns.statics.w_full)
+                if partitioned else trivial_plan(nq, ns.statics.w_full))
+        bundles = ns._bundle(plan)
+        groups = self._build_groups(plan, bundles)
+        self._plan_cache[key] = (plan, bundles, groups)
+        if len(self._plan_cache) > _PLAN_CACHE_MAX:
+            self._plan_cache.popitem(last=False)
+        return plan, bundles, groups, qcells
+
+    def _build_groups(self, plan: PartitionPlan,
+                      bundles) -> list[LaunchGroup]:
+        """Fold bundles sharing (w_search, skip_test) into one launch."""
+        from .search import _pad_bucket
+
+        by_sig: dict = {}
+        order: list = []
+        for b in bundles:
+            sig = (int(b.w_search), bool(b.skip_test))
+            if sig not in by_sig:
+                by_sig[sig] = []
+                order.append(sig)
+            by_sig[sig].append(bundle_query_sel(plan, b))
+        groups = []
+        for sig in order:
+            sels = by_sig[sig]
+            sel = (sels[0] if len(sels) == 1
+                   else np.concatenate(sels)).astype(np.int64)
+            groups.append(LaunchGroup(
+                w_search=sig[0], skip_test=sig[1], sel=sel,
+                pad_n=_pad_bucket(sel.shape[0], self.ns.opts.query_tile),
+                n_bundles=len(sels)))
+        return groups
+
+    # -- compiled launch schedules ------------------------------------------
+
+    def _get_launcher(self, groups, nq: int):
+        """One jitted program running the WHOLE launch schedule: per group
+        gather -> padded window search -> on-device scatter through the
+        composed schedule∘partition permutation. Cached by the plan's
+        *padded-bucket* shape ``(w, skip, pad_n)`` per group, NOT by exact
+        query counts or plan values: the selection vector is edge-padded to
+        the bucket on the host, so steady-state queries whose partition
+        counts drift within the same buckets (SPH stepping) reuse the
+        compiled schedule unchanged.
+
+        The Pallas path is excluded (its tile-window anchors are host
+        metadata computed from the plan fetch) and uses the per-group
+        dispatch loop in ``execute`` instead.
+        """
+        ns = self.ns
+        if ns.opts.use_pallas:
+            return None
+        metas = tuple((g.w_search, g.skip_test, g.pad_n) for g in groups)
+        key = (metas, nq, ns.params.k, ns.opts.query_tile)
+        launcher = self._launcher_cache.get(key)
+        if launcher is not None:
+            self._launcher_cache.move_to_end(key)
+            return launcher
+        self._last["compilations"] += 1
+        searcher = ns._searcher()
+        spec, radius, k, tile = (ns.spec, ns.params.radius, ns.params.k,
+                                 ns.opts.query_tile)
+        for g in groups:
+            self._signatures.add((g.w_search, g.skip_test, g.pad_n, tile,
+                                  k, False))
+
+        @jax.jit
+        def launcher(grid, points, queries_s, perm, sels):
+            out_idx = jnp.full((nq, k), -1, jnp.int32)
+            out_d2 = jnp.full((nq, k), jnp.inf, jnp.float32)
+            out_cnt = jnp.zeros((nq,), jnp.int32)
+            for (w, skip, _pad_n), sel in zip(metas, sels):
+                # sel arrives edge-padded to the bucket: padded slots repeat
+                # the group's last real query, so their searched rows are
+                # identical to that query's row and the duplicate scatter
+                # writes below are idempotent
+                qb = queries_s[sel]
+                idx, d2, cnt = searcher(grid, points, qb, spec, w, radius,
+                                        k, skip, tile)
+                orig = perm[sel]
+                out_idx = out_idx.at[orig].set(idx)
+                out_d2 = out_d2.at[orig].set(d2)
+                out_cnt = out_cnt.at[orig].set(cnt)
+            return out_idx, out_d2, out_cnt
+
+        self._launcher_cache[key] = launcher
+        if len(self._launcher_cache) > _LAUNCHER_CACHE_MAX:
+            self._launcher_cache.popitem(last=False)
+        return launcher
+
+    def _dispatch_loop(self, groups, queries_s, perm, qcells, nq: int,
+                       k: int):
+        """Per-group async dispatch (Pallas path): each launch needs host
+        tile-anchor metadata from the plan fetch, so the schedule cannot be
+        a single jitted program — but every dispatch is still non-blocking
+        with on-device scatter."""
+        ns = self.ns
+        out_idx = jnp.full((nq, k), -1, jnp.int32)
+        out_d2 = jnp.full((nq, k), jnp.inf, jnp.float32)
+        out_cnt = jnp.zeros((nq,), jnp.int32)
+        searcher = ns._searcher()
+        for g in groups:
+            n_b = g.sel.shape[0]
+            sel_dev = jnp.asarray(g.sel, jnp.int32)
+            qb = queries_s[sel_dev]
+            qb = jnp.pad(qb, ((0, g.pad_n - n_b), (0, 0)), mode="edge")
+            kw = {}
+            if qcells is not None:
+                qc = qcells[g.sel]
+                qc = np.pad(qc, ((0, g.pad_n - n_b), (0, 0)), mode="edge")
+                kw["qcells"] = qc
+            sig = (g.w_search, g.skip_test, g.pad_n, ns.opts.query_tile,
+                   k, ns.opts.use_pallas)
+            if sig not in self._signatures:
+                self._signatures.add(sig)
+                self._last["compilations"] += 1
+            idx, d2, cnt = searcher(
+                ns.grid, ns.points, qb, ns.spec,
+                g.w_search, ns.params.radius, k,
+                g.skip_test, ns.opts.query_tile, **kw)
+            orig = perm[sel_dev]
+            out_idx = out_idx.at[orig].set(idx[:n_b])
+            out_d2 = out_d2.at[orig].set(d2[:n_b])
+            out_cnt = out_cnt.at[orig].set(cnt[:n_b])
+            self._last["dispatches"] += 1
+        return out_idx, out_d2, out_cnt
+
+    # -- execution ----------------------------------------------------------
+
+    def execute(self, queries) -> SearchResult:
+        ns = self.ns
+        self._last = dict(host_syncs=0, plan_fetches=0, launches=0,
+                          dispatches=0, compilations=0, bundles=0,
+                          plan_cache_hit=False)
+        t0 = time.perf_counter()
+        queries = jnp.asarray(queries, jnp.float32)
+        nq = queries.shape[0]
+        k = ns.params.k
+
+        perm, _inv = ns._schedule(queries)
+        queries_s = queries[perm]
+        plan, bundles, groups, qcells = self._plan(queries_s)
+        ns.report.t_opt = time.perf_counter() - t0
+        ns.report.num_partitions = plan.num_partitions
+        ns.report.bundles = bundles
+        self._last["bundles"] = len(bundles)
+        self._last["launches"] = len(groups)
+
+        t0 = time.perf_counter()
+        launcher = self._get_launcher(groups, nq)
+        if launcher is not None:
+            # edge-pad each selection to its bucket so the launcher only
+            # ever sees bucketed shapes (zero retraces on count drift)
+            sels = tuple(jnp.asarray(
+                np.pad(g.sel, (0, g.pad_n - g.sel.shape[0]), mode="edge"),
+                jnp.int32) for g in groups)
+            out_idx, out_d2, out_cnt = launcher(
+                ns.grid, ns.points, queries_s, perm, sels)
+            self._last["dispatches"] = 1
+        else:
+            out_idx, out_d2, out_cnt = self._dispatch_loop(
+                groups, queries_s, perm, qcells, nq, k)
+
+        # one-sync contract: the single blocking materialization
+        jax.block_until_ready((out_idx, out_d2, out_cnt))
+        self._last["host_syncs"] += 1
+        ns.report.t_search = time.perf_counter() - t0
+        ns.report.launches = self._last["launches"]
+        ns.report.host_syncs = self._last["host_syncs"]
+        ns.report.plan_fetches = self._last["plan_fetches"]
+
+        self._totals["queries"] += 1
+        for key in ("launches", "dispatches", "bundles", "host_syncs",
+                    "plan_fetches", "compilations"):
+            self._totals[key] += self._last[key]
+        self._totals["plan_cache_hits"] += int(self._last["plan_cache_hit"])
+
+        return SearchResult(indices=out_idx, distances2=out_d2,
+                            counts=out_cnt)
+
+    # -- surface ------------------------------------------------------------
+
+    def warmup(self, queries) -> dict:
+        """Run one query to populate the plan and compile caches (SPH-style
+        steppers call this once before the timed loop). Returns stats()."""
+        self.execute(queries)
+        return self.stats()
+
+    def stats(self) -> dict:
+        """Counters for the caching/sync contract.
+
+        ``last`` holds the most recent query's breakdown; ``compilations``
+        counts first-seen launch signatures (the jit cache compiles once per
+        signature); ``jit_cache_sizes`` exposes the actual jit caches so
+        tests can assert a steady-state query compiled nothing.
+        """
+        sizes = {}
+        try:
+            from .search import window_search
+            sizes["window_search"] = window_search._cache_size()
+        except AttributeError:                      # pragma: no cover
+            pass
+        if self.ns.opts.use_pallas:
+            try:
+                from ..kernels.knn_tile import knn_tile
+                sizes["knn_tile"] = knn_tile._cache_size()
+            except AttributeError:                  # pragma: no cover
+                pass
+        return {
+            **{k: int(v) for k, v in self._totals.items()},
+            "last": dict(self._last),
+            "signatures": len(self._signatures),
+            "plan_cache_entries": len(self._plan_cache),
+            "launcher_cache_entries": len(self._launcher_cache),
+            "jit_cache_sizes": sizes,
+        }

@@ -162,6 +162,14 @@ class PartitionPlan:
         return len(self.partitions)
 
 
+def trivial_plan(nq: int, w_full: int) -> PartitionPlan:
+    """Single full-window partition (partitioning disabled / no megacells)."""
+    part = Partition(w_search=w_full, skip_test=False, count=nq, rho=1.0,
+                     start=0)
+    return PartitionPlan(perm=np.arange(nq), partitions=[part],
+                         w_full=w_full)
+
+
 def plan_partitions(
     w_search: Array,
     skip: Array,
@@ -169,7 +177,8 @@ def plan_partitions(
     w_full: int,
 ) -> PartitionPlan:
     """Group queries into partitions (host orchestration, like the paper's
-    host-side partition launch loop in Listing 3)."""
+    host-side partition launch loop in Listing 3). Accepts device arrays or
+    host numpy (the executor passes the already-fetched plan metadata)."""
     w_np = np.asarray(jax.device_get(w_search))
     s_np = np.asarray(jax.device_get(skip))
     r_np = np.asarray(jax.device_get(rho))

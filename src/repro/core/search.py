@@ -30,8 +30,8 @@ _SELECTION = os.environ.get("REPRO_SELECTION", "topk")
 
 from . import bundle as bundle_mod
 from .grid import build_cell_grid, choose_grid_spec
-from .partition import (MegacellStatics, Partition, PartitionPlan,
-                        compute_megacells, megacell_statics, plan_partitions)
+from .partition import (MegacellStatics, PartitionPlan, compute_megacells,
+                        megacell_statics, plan_partitions, trivial_plan)
 from .schedule import schedule_queries
 from .types import (Array, CellGrid, GridSpec, SearchOpts, SearchParams,
                     SearchResult)
@@ -133,7 +133,8 @@ def _pad_bucket(n: int, tile: int) -> int:
 
 @dataclasses.dataclass
 class SearchReport:
-    """Execution breakdown mirroring paper Fig. 12 categories."""
+    """Execution breakdown mirroring paper Fig. 12 categories, plus the
+    executor's dispatch/sync counters (DESIGN.md section 3)."""
 
     t_build: float = 0.0       # BVH   (grid build)
     t_opt: float = 0.0         # Opt   (schedule + partition + bundle planning)
@@ -141,6 +142,9 @@ class SearchReport:
     t_search: float = 0.0      # Search
     bundles: list = dataclasses.field(default_factory=list)
     num_partitions: int = 0
+    launches: int = 0          # device dispatches in the last query
+    host_syncs: int = 0        # blocking result materializations (executor: 1)
+    plan_fetches: int = 0      # small plan-metadata transfers (executor: <=1)
 
 
 class NeighborSearch:
@@ -168,6 +172,8 @@ class NeighborSearch:
         self.statics = megacell_statics(self.spec.cell_size, params,
                                         opts.w_max)
         self.report = SearchReport()
+        from .executor import QueryExecutor
+        self.executor = QueryExecutor(self)
 
     # -- pipeline stages ----------------------------------------------------
 
@@ -181,10 +187,7 @@ class NeighborSearch:
     def _partition(self, queries_s: Array) -> PartitionPlan:
         nq = queries_s.shape[0]
         if not self.opts.partition or not self.statics.has_megacells:
-            part = Partition(w_search=self.statics.w_full, skip_test=False,
-                             count=nq, rho=1.0, start=0)
-            return PartitionPlan(perm=np.arange(nq), partitions=[part],
-                                 w_full=self.statics.w_full)
+            return trivial_plan(nq, self.statics.w_full)
         w_search, skip, rho = compute_megacells(
             self.grid, queries_s, self.statics, self.params)
         return plan_partitions(w_search, skip, rho, self.statics.w_full)
@@ -202,6 +205,18 @@ class NeighborSearch:
     # -- execution ----------------------------------------------------------
 
     def query(self, queries) -> SearchResult:
+        """Search ``queries`` [Nq, 3]; results come back in query order.
+
+        Default path is the device-resident ``QueryExecutor`` (async
+        signature-batched launches, on-device scatter, one host sync —
+        DESIGN.md section 3); ``SearchOpts(executor=False)`` keeps the
+        legacy per-bundle host loop for A/B benchmarking.
+        """
+        if self.opts.executor:
+            return self.executor.execute(queries)
+        return self._query_host_loop(queries)
+
+    def _query_host_loop(self, queries) -> SearchResult:
         import time
         queries = jnp.asarray(queries, jnp.float32)
         nq = queries.shape[0]
@@ -223,11 +238,7 @@ class NeighborSearch:
 
         t0 = time.perf_counter()
         for b in bundles:
-            sel_sched = np.concatenate([
-                plan.perm[plan.partitions[i].start:
-                          plan.partitions[i].start + plan.partitions[i].count]
-                for i in b.members
-            ])
+            sel_sched = bundle_mod.bundle_query_sel(plan, b)
             qb = queries_s[jnp.asarray(sel_sched)]
             pad_n = _pad_bucket(qb.shape[0], self.opts.query_tile)
             # edge-replicate padding: padded rows are copies of a real query
@@ -244,6 +255,11 @@ class NeighborSearch:
             out_d2[orig] = np.asarray(jax.device_get(d2))[:n_b]
             out_cnt[orig] = np.asarray(jax.device_get(cnt))[:n_b]
         self.report.t_search = time.perf_counter() - t0
+        self.report.launches = len(bundles)
+        # per bundle: 3 blocking result transfers; +1 for the perm fetch
+        self.report.host_syncs = 3 * len(bundles) + 1
+        self.report.plan_fetches = 3 if (self.opts.partition and
+                                         self.statics.has_megacells) else 0
 
         return SearchResult(indices=jnp.asarray(out_idx),
                             distances2=jnp.asarray(out_d2),

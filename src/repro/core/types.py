@@ -126,3 +126,6 @@ class SearchOpts:
     use_pallas: bool = False           # fused kernels (interpret on CPU)
     query_tile: int = 256              # queries per jnp/kernel tile
     w_max: int = 6                     # max megacell growth rings examined
+    executor: bool = True              # device-resident QueryExecutor path
+    #                                    (False: legacy per-bundle host loop,
+    #                                    kept for A/B benchmarking)

@@ -1,13 +1,21 @@
-"""Pallas TPU kernel: streaming windowed top-K neighbor selection.
+"""Pallas TPU kernel: fused gather → distance → streaming top-K selection.
 
 This is the fused hot loop of the search (paper: BVH traversal + IS shader +
-priority queue; here: candidate-tile streaming + MXU distance + VPU
-selection, DESIGN.md section 2):
+priority queue; here: candidate streaming + MXU distance + VPU selection,
+DESIGN.md section 2):
 
   grid = (query_tiles, candidate_tiles)   # candidate axis is minor/stream
-  per step:  d2 = ||q||^2 + ||p||^2 - 2 q.p^T   (MXU, [TQ, TM])
+  per step:  p  = points[clip(idx_tile)]                (in-kernel gather)
+             d2 = ||q||^2 + ||p||^2 - 2 q.p^T           (MXU, [TQ, TM])
              merge into running best-K held in VMEM scratch
   last step: emit [TQ, K] distances + indices
+
+The candidate *positions* are never materialized in HBM: the kernel
+receives only the int32 candidate-id stream ([n_tiles, M], 4 B/candidate)
+plus the coordinate table ([N, 8] f32, resident once), and gathers each TM
+sub-tile of positions inside VMEM. The legacy layout shipped a
+[n_tiles, M, 8] f32 window-position array (32 B/candidate) through HBM —
+8x the traffic, duplicated across overlapping windows.
 
 The merge uses K-pass extraction over [TQ, K + TM] with a one-hot argmin
 (vectorizes on the VPU; no per-row gathers). A per-step threshold guard
@@ -15,8 +23,10 @@ The merge uses K-pass extraction over [TQ, K + TM] with a one-hot argmin
 current K-th best — the TPU analogue of the paper's AH-shader early ray
 termination.
 
-Deployment note: on real TPU, K should be padded to a multiple of the lane
-width for the output block; the wrapper keeps logical K and slices.
+Deployment notes: on real TPU, K should be padded to a multiple of the lane
+width for the output block (the wrapper keeps logical K and slices), and a
+points table larger than VMEM must be sharded or kept in ANY/HBM with
+manual DMA; on this container the kernels run in interpret mode.
 """
 from __future__ import annotations
 
@@ -64,9 +74,9 @@ def _merge_topk(best_d2, best_idx, d2, idx, k: int):
     return out_d2, out_idx
 
 
-def _knn_kernel(q_ref, pt_ref, idx_ref, out_d2_ref, out_idx_ref,
+def _knn_kernel(q_ref, pts_ref, idx_ref, out_d2_ref, out_idx_ref,
                 best_d2, best_idx, *, k: int, r2: float, skip_test: bool,
-                n_m: int):
+                n_m: int, n_pts: int):
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -75,18 +85,21 @@ def _knn_kernel(q_ref, pt_ref, idx_ref, out_d2_ref, out_idx_ref,
         best_idx[...] = jnp.full_like(best_idx, -1)
 
     q = q_ref[...]                                        # [TQ, 8]
-    p = pt_ref[0]                                         # [8, TM]
-    idx = idx_ref[0][None, :]                             # [1, TM]
+    idx = idx_ref[0]                                      # [TM]
+    pts = pts_ref[...]                                    # [N_pad, 8]
+    # fused gather: candidate positions pulled from the VMEM-resident
+    # coordinate table; invalid slots (-1) clip to row 0 and are masked below
+    p = jnp.take(pts, jnp.clip(idx, 0, n_pts - 1), axis=0)  # [TM, 8]
     qn = jnp.sum(q * q, axis=1, keepdims=True)
-    pn = jnp.sum(p * p, axis=0, keepdims=True)
-    cross = jnp.dot(q, p, preferred_element_type=jnp.float32)
+    pn = jnp.sum(p * p, axis=1)[None, :]
+    cross = jnp.dot(q, p.T, preferred_element_type=jnp.float32)
     d2 = jnp.maximum(qn + pn - 2.0 * cross, 0.0)          # [TQ, TM]
 
-    invalid = jnp.broadcast_to(idx < 0, d2.shape)
+    invalid = jnp.broadcast_to((idx < 0)[None, :], d2.shape)
     if not skip_test:
         invalid = invalid | (d2 > r2)
     d2 = jnp.where(invalid, _BIG, d2)
-    idx_b = jnp.where(invalid, -1, jnp.broadcast_to(idx, d2.shape))
+    idx_b = jnp.where(invalid, -1, jnp.broadcast_to(idx[None, :], d2.shape))
 
     # threshold guard: does any candidate beat any row's current K-th best?
     row_kth = jnp.max(best_d2[...], axis=1)               # [TQ]
@@ -111,7 +124,7 @@ def _knn_kernel(q_ref, pt_ref, idx_ref, out_d2_ref, out_idx_ref,
     static_argnames=("k", "r2", "skip_test", "tq", "tm", "interpret"))
 def knn_tile(
     q: jax.Array,          # [Nq, 3] f32, Nq % tq == 0 per query tile group
-    wnd_pos: jax.Array,    # [n_tiles, M, 3] candidate positions per q-tile
+    points: jax.Array,     # [N, 3] f32 coordinate table (gathered in-kernel)
     wnd_idx: jax.Array,    # [n_tiles, M] int32 candidate ids (-1 invalid)
     *,
     k: int,
@@ -121,29 +134,36 @@ def knn_tile(
     tm: int = DEFAULT_TM,
     interpret: bool = True,
 ) -> tuple[jax.Array, jax.Array]:
-    """Streaming top-K of each query against its tile's candidate window.
+    """Streaming top-K of each query against its tile's candidate id window.
 
     Returns (d2 [Nq, k] ascending inf-padded, idx [Nq, k] -1-padded).
     """
-    n_tiles, m, _ = wnd_pos.shape
+    n_tiles, m = wnd_idx.shape
     assert q.shape[0] == n_tiles * tq, (q.shape, n_tiles, tq)
+    n_pts = points.shape[0]
     m_pad = (-m) % tm
-    wnd_pos = jnp.pad(wnd_pos.astype(jnp.float32),
-                      ((0, 0), (0, m_pad), (0, COORD_PAD - 3)),
-                      constant_values=0.0)
     wnd_idx = jnp.pad(wnd_idx, ((0, 0), (0, m_pad)), constant_values=-1)
-    wnd_pos_t = jnp.swapaxes(wnd_pos, 1, 2)               # [n_tiles, 8, M]
+    # coordinate table: coords padded to the register width, rows padded to
+    # the sublane multiple; pad rows park far away (never selected: gather
+    # indices are clipped to n_pts-1 and -1 slots are masked)
+    n_row_pad = (-n_pts) % 8
+    pts8 = jnp.pad(points.astype(jnp.float32),
+                   ((0, n_row_pad), (0, COORD_PAD - 3)),
+                   constant_values=0.0)
     qp = jnp.pad(q.astype(jnp.float32), ((0, 0), (0, COORD_PAD - 3)))
-    n_m = wnd_pos_t.shape[2] // tm
+    n_m = wnd_idx.shape[1] // tm
 
     kernel = functools.partial(_knn_kernel, k=k, r2=float(r2),
-                               skip_test=bool(skip_test), n_m=n_m)
+                               skip_test=bool(skip_test), n_m=n_m,
+                               n_pts=n_pts)
     out_d2, out_idx = pl.pallas_call(
         kernel,
         grid=(n_tiles, n_m),
         in_specs=[
             pl.BlockSpec((tq, COORD_PAD), lambda i, j: (i, 0)),
-            pl.BlockSpec((1, COORD_PAD, tm), lambda i, j: (i, 0, j)),
+            # full table, constant index map: stays VMEM-resident across
+            # the candidate stream instead of re-fetching per step
+            pl.BlockSpec((n_pts + n_row_pad, COORD_PAD), lambda i, j: (0, 0)),
             pl.BlockSpec((1, tm), lambda i, j: (i, j)),
         ],
         out_specs=[
@@ -159,5 +179,5 @@ def knn_tile(
             pltpu.VMEM((tq, k), jnp.int32),
         ],
         interpret=interpret,
-    )(qp, wnd_pos_t, wnd_idx)
+    )(qp, pts8, wnd_idx)
     return out_d2, out_idx

@@ -3,16 +3,22 @@
 ``window_search_pallas`` matches ``core.search.window_search``'s signature
 so `SearchOpts(use_pallas=True)` swaps the jnp tile path for the fused
 kernel path. On this CPU container the kernels run in interpret mode
-(correctness); on TPU set ``interpret=False`` via `PALLAS_INTERPRET=0`.
+(correctness); on TPU set ``interpret=False`` via `PALLAS_INTERPRET=0`
+(knob reference: DESIGN.md section 4).
 
 Tile-window semantics: each Morton-contiguous query tile gathers ONE shared
 cell window (the union of its members' windows) — that is the coherence
 payoff of the paper's section-4 scheduling: neighbors of adjacent queries
-come from the same VMEM-resident candidate tile. Because the shared window
-is a superset of any member's own window, the r^2 filter is always applied
-here (the jnp per-query path implements the paper's skip-sphere-test
-variant; in this fused kernel the distance is a byproduct of selection, so
-the skip saves nothing — documented deviation).
+come from the same VMEM-resident candidate tile. Only the candidate *ids*
+are staged ([n_tiles, M] int32); the fused kernel gathers positions from
+the coordinate table inside VMEM (see knn_tile.py), so the old
+[n_tiles, M, 3] window-position array never exists in HBM. The sphere-test
+skip deviation of this path is documented in DESIGN.md section 2.
+
+``qcells`` lets the caller (the QueryExecutor) pass host-resident query
+cell coordinates so the tile-window shape — a host-static quantity — is
+derived without a mid-dispatch device sync; standalone callers omit it and
+pay one small transfer here instead.
 """
 from __future__ import annotations
 
@@ -40,6 +46,7 @@ def window_search_pallas(
     k: int,
     skip_test: bool,      # accepted for signature parity; see module note
     tile: int = 256,
+    qcells: np.ndarray | None = None,   # [Nq, 3] host cell coords (optional)
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     nq = queries.shape[0]
     assert nq % tile == 0
@@ -47,27 +54,24 @@ def window_search_pallas(
     dims = np.asarray(spec.dims)
     cap = spec.capacity
 
-    qcells = spec.cell_of(queries)                        # [Nq, 3]
-    qc_t = qcells.reshape(n_tiles, tile, 3)
-    lo = jnp.min(qc_t, axis=1) - w
-    hi = jnp.max(qc_t, axis=1) + w
-    spread = jax.device_get(jnp.max(hi - lo + 1, axis=0)) # [3] host-static
+    if qcells is None:
+        # standalone use: one small host transfer to size the tile windows
+        qcells = np.asarray(jax.device_get(spec.cell_of(queries)))
+    qc_t = np.asarray(qcells, np.int64).reshape(n_tiles, tile, 3)
+    lo = qc_t.min(axis=1) - w
+    hi = qc_t.max(axis=1) + w
+    spread = (hi - lo + 1).max(axis=0)                    # [3] host-static
     ws = tuple(int(min(s, d)) for s, d in zip(spread, dims))
-    anchors = jnp.clip(lo, 0, jnp.asarray(dims - np.asarray(ws), jnp.int32))
+    anchors = jnp.asarray(np.clip(lo, 0, dims - np.asarray(ws)), jnp.int32)
 
     def gather_one(a):
         blk = jax.lax.dynamic_slice(
             grid.dense, (a[0], a[1], a[2], 0), (*ws, cap))
         return blk.reshape(-1)
 
-    wnd_idx = jax.vmap(gather_one)(anchors)               # [n_tiles, M]
-    wnd_pos = points[jnp.clip(wnd_idx, 0, points.shape[0] - 1)]
-    # park invalid slots far away so they never enter the top-K even before
-    # the idx mask (belt and braces for fp edge cases)
-    wnd_pos = jnp.where((wnd_idx < 0)[..., None], jnp.float32(1e30), wnd_pos)
-
+    wnd_idx = jax.vmap(gather_one)(anchors)               # [n_tiles, M] i32
     d2, idx = knn_tile(
-        queries, wnd_pos, wnd_idx, k=k, r2=float(radius) ** 2,
+        queries, points, wnd_idx, k=k, r2=float(radius) ** 2,
         skip_test=False, tq=tile, interpret=INTERPRET)
     counts = jnp.sum((idx >= 0).astype(jnp.int32), axis=1)
     return idx, d2, counts

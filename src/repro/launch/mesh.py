@@ -29,6 +29,21 @@ def make_production_mesh(*, multi_pod: bool = False):
     return Mesh(dev_array, axes)
 
 
+def make_mesh_compat(shape, axes):
+    """``jax.make_mesh`` across JAX versions: newer JAX wants explicit
+    ``axis_types`` on meshes fed to shard_map, older JAX has no such kwarg
+    (and no ``jax.sharding.AxisType``). Feature-detect, don't version-sniff.
+    """
+    import jax
+
+    try:
+        from jax.sharding import AxisType
+    except ImportError:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
 def make_test_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh for CPU multi-device tests."""
     import jax

@@ -31,10 +31,9 @@ def test_knn_tile_sweep(rng, k, m):
     tq = 64
     q = jnp.asarray(rng.random((128, 3)), jnp.float32)
     p = jnp.asarray(rng.random((m, 3)), jnp.float32)
-    wnd_pos = jnp.broadcast_to(p, (2, m, 3))
     wnd_idx = jnp.broadcast_to(jnp.arange(m, dtype=jnp.int32), (2, m))
     r = 0.4
-    d2, idx = knn_tile(q, wnd_pos, wnd_idx, k=k, r2=r * r, tq=tq, tm=128)
+    d2, idx = knn_tile(q, p, wnd_idx, k=k, r2=r * r, tq=tq, tm=128)
     oi, od, oc = brute_force_search(p, q, r, k)
     np.testing.assert_allclose(
         np.where(np.isinf(np.asarray(d2)), -1, np.asarray(d2)),
@@ -51,27 +50,25 @@ def test_knn_tile_sweep(rng, k, m):
 def test_knn_tile_k_exceeds_candidates(rng):
     q = jnp.asarray(rng.random((64, 3)), jnp.float32)
     p = jnp.asarray(rng.random((5, 3)), jnp.float32)
-    wnd_pos = jnp.broadcast_to(p, (1, 5, 3))
     wnd_idx = jnp.broadcast_to(jnp.arange(5, dtype=jnp.int32), (1, 5))
-    d2, idx = knn_tile(q, wnd_pos, wnd_idx, k=8, r2=10.0, tq=64, tm=128)
+    d2, idx = knn_tile(q, p, wnd_idx, k=8, r2=10.0, tq=64, tm=128)
     assert (np.asarray(idx)[:, 5:] == -1).all()
     assert np.isinf(np.asarray(d2)[:, 5:]).all()
 
 
 def test_knn_tile_all_masked(rng):
     q = jnp.asarray(rng.random((64, 3)), jnp.float32)
-    wnd_pos = jnp.ones((1, 64, 3), jnp.float32) * 50.0
+    p = jnp.ones((64, 3), jnp.float32) * 50.0
     wnd_idx = jnp.full((1, 64), -1, jnp.int32)
-    d2, idx = knn_tile(q, wnd_pos, wnd_idx, k=4, r2=0.01, tq=64, tm=64)
+    d2, idx = knn_tile(q, p, wnd_idx, k=4, r2=0.01, tq=64, tm=64)
     assert (np.asarray(idx) == -1).all()
 
 
 def test_knn_tile_duplicate_points(rng):
     q = jnp.zeros((64, 3), jnp.float32)
     p = jnp.zeros((10, 3), jnp.float32)  # all identical at the query
-    wnd_pos = jnp.broadcast_to(p, (1, 10, 3))
     wnd_idx = jnp.broadcast_to(jnp.arange(10, dtype=jnp.int32), (1, 10))
-    d2, idx = knn_tile(q, wnd_pos, wnd_idx, k=4, r2=1.0, tq=64, tm=128)
+    d2, idx = knn_tile(q, p, wnd_idx, k=4, r2=1.0, tq=64, tm=128)
     assert np.allclose(np.asarray(d2), 0.0)
     assert len(set(np.asarray(idx)[0].tolist())) == 4  # distinct indices
 

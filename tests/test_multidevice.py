@@ -23,12 +23,12 @@ import numpy as np, jax, jax.numpy as jnp
 from repro.core.distributed import distributed_neighbor_search
 from repro.core.types import SearchParams
 from repro.kernels.ref import brute_force_search
+from repro.launch.mesh import make_mesh_compat
 rng = np.random.default_rng(3)
 pts = rng.random((4000, 3)).astype(np.float32)
 qs = rng.random((900, 3)).astype(np.float32)
 r, K = 0.07, 8
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_mesh_compat((4, 2), ("data", "model"))
 res = distributed_neighbor_search(mesh, pts, qs, SearchParams(radius=r, k=K))
 oi, od, oc = brute_force_search(jnp.asarray(pts), jnp.asarray(qs), r, K)
 assert np.array_equal(np.asarray(oi), np.asarray(res.indices))
