@@ -1,0 +1,124 @@
+"""Dynamic-scene stepping: persistent ``SimulationSession`` vs the legacy
+rebuild-per-frame path on a steady-state SPH-like workload (DESIGN.md
+section 7).
+
+Both paths see the IDENTICAL precomputed position trajectory (coherent
+drift + jitter, bounded to the unit box, displacement per step a fraction
+of a cell — the temporal-coherence regime of frame-stepped solvers). The
+rebuild path is exactly what ``examples/sph_fluid.py --rebuild`` does: a
+fresh ``NeighborSearch`` every frame, so it pays host spec planning, a full
+grid build, schedule/partition/bundle replanning, and — because the
+re-chosen spec differs frame to frame — recompilation. The session path
+pays an incremental device-resident update plus a cached-plan replay.
+
+Writes per-case rows to ``BENCH_dynamic.json`` at the repo root so the
+perf trajectory accumulates across PRs. ``REPRO_BENCH_SMOKE=1`` shrinks
+the workload for CI (scripts/ci.sh).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import (NeighborSearch, SearchOpts, SearchParams,
+                        SimulationSession)
+
+from .common import emit
+
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE", "0") == "1"
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_dynamic.json")
+
+
+def _trajectory(n: int, steps: int, seed: int,
+                sigma: float) -> list[np.ndarray]:
+    """Coherently drifting cloud: per-point velocity random walk, clipped
+    to the unit box (reflecting the SPH wall behavior)."""
+    rng = np.random.default_rng(seed)
+    pos = rng.random((n, 3)).astype(np.float32)
+    vel = rng.normal(0, sigma, (n, 3)).astype(np.float32)
+    frames = [pos]
+    for _ in range(steps - 1):
+        vel = 0.9 * vel + rng.normal(0, 0.3 * sigma,
+                                     (n, 3)).astype(np.float32)
+        pos = np.clip(pos + vel, 0.0, 1.0).astype(np.float32)
+        frames.append(pos)
+    return frames
+
+
+def _assert_close(a, b):
+    da = np.where(np.isinf(np.asarray(a.distances2)), -1.0,
+                  np.asarray(a.distances2))
+    db = np.where(np.isinf(np.asarray(b.distances2)), -1.0,
+                  np.asarray(b.distances2))
+    np.testing.assert_allclose(da, db, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(a.counts),
+                                  np.asarray(b.counts))
+
+
+def run(k=16):
+    if SMOKE:
+        cases = [("sph-2k", 2_000, 6, 0.05)]
+    else:
+        cases = [
+            ("sph-8k", 8_000, 15, 0.04),
+            ("sph-20k", 20_000, 12, 0.03),
+        ]
+    results = {}
+    for name, n, steps, radius in cases:
+        # velocity scale ~0.03 cells/step (default cell = radius/4): the
+        # worst-moving point then drifts ~0.1 cell per step, so the session
+        # replays its plan for a handful of frames between replans — the
+        # steady-state solver regime (SPH CFL-limited steps move far less
+        # than a cell)
+        frames = _trajectory(n, steps, seed=7,
+                             sigma=0.03 * radius / 4.0)
+        params = SearchParams(radius=radius, k=k, mode="range")
+
+        def rebuild_once(f):
+            ns = NeighborSearch(f, params, SearchOpts())
+            return ns.query(f)
+
+        sess = SimulationSession(frames[0], params, SearchOpts())
+        res_s = sess.step(frames[0])                 # warm compile + plan
+        res_r = rebuild_once(frames[0])              # warm shared jit caches
+        # interleaved stepping: both paths advance through the SAME frames
+        # back to back, so machine noise hits them equally (cf. figtp's
+        # paired timing)
+        ts_session, ts_rebuild = [], []
+        for f in frames[1:]:
+            t0 = time.perf_counter()
+            res_s = sess.step(f)
+            ts_session.append(time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            res_r = rebuild_once(f)
+            ts_rebuild.append(time.perf_counter() - t0)
+        st = sess.stats()
+
+        _assert_close(res_s, res_r)                  # final frame, same math
+
+        t_s = float(np.median(ts_session))
+        t_r = float(np.median(ts_rebuild))
+        row = {
+            "session_us_per_step": t_s * 1e6,
+            "rebuild_us_per_step": t_r * 1e6,
+            "speedup": t_r / t_s,
+            "steps": steps,
+            "fast_steps": st.get("fast_steps", 0),
+            "replans": st.get("replans", 0),
+            "respecs": st.get("respecs", 0),
+        }
+        results[name] = row
+        emit(f"figdyn/{name}/rebuild", t_r / n, "per-frame teardown")
+        emit(f"figdyn/{name}/session", t_s / n,
+             f"speedup={row['speedup']:.2f}x;"
+             f"fast={row['fast_steps']}/{steps};"
+             f"replans={row['replans']}")
+
+    with open(OUT_PATH, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return results

@@ -2,11 +2,20 @@
 neighbor-search core — the application class (SPlisHSPlasH / cuNSearch)
 the paper's range search serves.
 
-Each step: (1) rebuild the structure over moved particles, (2) range
-search around every particle, (3) density + pressure-force kernel sums
-over the returned neighbor lists, (4) symplectic Euler integration.
+Default path is the dynamic-scene subsystem (DESIGN.md section 7): ONE
+persistent ``SimulationSession`` owns a frozen grid across the whole run,
+each step re-bins the moved particles device-resident and replays the
+cached schedule/partition plan while displacements stay small. Positions
+never leave the device. ``--rebuild`` keeps the legacy path for A/B: a
+fresh ``NeighborSearch`` per frame (host spec planning, full rebuild, cold
+plan caches — what the session amortizes away).
+
+Each step: (1) update structure over moved particles, (2) range search
+around every particle (self-query), (3) density + pressure-force kernel
+sums over the returned neighbor lists, (4) symplectic Euler integration.
 
   PYTHONPATH=src python examples/sph_fluid.py --particles 8000 --steps 5
+  PYTHONPATH=src python examples/sph_fluid.py --rebuild   # legacy A/B
 """
 import argparse
 import time
@@ -15,7 +24,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import NeighborSearch, SearchOpts, SearchParams
+from repro.core import (NeighborSearch, SearchOpts, SearchParams,
+                        SimulationSession)
 
 H = 0.06            # smoothing radius
 K_MAX = 32          # bounded neighbor count (the paper's K)
@@ -48,40 +58,86 @@ def sph_forces(pos, vel, nbr_idx, nbr_d2):
     return f / density[:, None] + GRAVITY, density
 
 
-def step(pos, vel):
+@jax.jit
+def integrate(pos, vel, acc):
+    """Symplectic Euler + reflective box walls, all on device."""
+    vel = vel + DT * acc
+    pos = pos + DT * vel
+    pos = jnp.clip(pos, 0.0, 1.0)
+    vel = jnp.where((pos <= 0.0) | (pos >= 1.0), -0.5 * vel, vel)
+    return pos, vel
+
+
+def step_rebuild(pos, vel):
+    """Legacy per-frame teardown/rebuild (pre-session behavior)."""
     ns = NeighborSearch(np.asarray(pos),
                         SearchParams(radius=H, k=K_MAX, mode="range"),
                         SearchOpts())
+    t0 = time.perf_counter()
     res = ns.query(np.asarray(pos))
+    t_search = time.perf_counter() - t0
+    t0 = time.perf_counter()
     acc, density = sph_forces(jnp.asarray(pos), vel, res.indices,
                               res.distances2)
-    vel = vel + DT * acc
-    pos = pos + DT * vel
-    # keep particles in the box (reflective walls)
-    pos = jnp.clip(pos, 0.0, 1.0)
-    vel = jnp.where((pos <= 0.0) | (pos >= 1.0), -0.5 * vel, vel)
-    return pos, vel, float(density.mean()), ns
+    pos, vel = integrate(jnp.asarray(pos), vel, acc)
+    jax.block_until_ready(pos)
+    t_phys = time.perf_counter() - t0
+    split = dict(update=0.0, plan=ns.report.t_opt, search=t_search,
+                 physics=t_phys)
+    info = (f"partitions={ns.report.num_partitions} "
+            f"launches={ns.report.launches} syncs={ns.report.host_syncs}")
+    return pos, vel, float(density.mean()), split, info
+
+
+def step_session(sess, pos, vel):
+    """Session path: incremental update + cached-plan replay, self-query."""
+    res = sess.step(pos)
+    r = sess.report
+    t0 = time.perf_counter()
+    acc, density = sph_forces(pos, vel, res.indices, res.distances2)
+    pos, vel = integrate(pos, vel, acc)
+    jax.block_until_ready(pos)
+    t_phys = time.perf_counter() - t0
+    split = dict(update=r.t_update, plan=r.t_plan, search=r.t_search,
+                 physics=t_phys)
+    info = (f"fast={int(r.fast)} replan={int(r.replanned)} "
+            f"respec={int(r.respecced)} disp={r.max_disp:.4f}")
+    return pos, vel, float(density.mean()), split, info
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--particles", type=int, default=8000)
     ap.add_argument("--steps", type=int, default=5)
+    ap.add_argument("--rebuild", action="store_true",
+                    help="legacy rebuild-per-frame path (A/B baseline)")
     args = ap.parse_args()
 
     rng = np.random.default_rng(0)
     pos = jnp.asarray(rng.random((args.particles, 3), np.float32) *
                       [0.4, 0.4, 0.8])          # dam-break column
     vel = jnp.zeros_like(pos)
+    sess = None
+    if not args.rebuild:
+        sess = SimulationSession(
+            pos, SearchParams(radius=H, k=K_MAX, mode="range"),
+            SearchOpts())
     for s in range(args.steps):
         t0 = time.perf_counter()
-        pos, vel, rho, ns = step(pos, vel)
+        if args.rebuild:
+            pos, vel, rho, split, info = step_rebuild(pos, vel)
+        else:
+            pos, vel, rho, split, info = step_session(sess, pos, vel)
         dt = time.perf_counter() - t0
-        print(f"step {s}: mean_density={rho:9.1f} "
-              f"partitions={ns.report.num_partitions} "
-              f"launches={ns.report.launches} "
-              f"syncs={ns.report.host_syncs} "
-              f"wall={dt:.2f}s")
+        print(f"step {s}: mean_density={rho:9.1f} wall={dt:.2f}s "
+              f"(update={split['update']:.3f} plan={split['plan']:.3f} "
+              f"search={split['search']:.3f} "
+              f"physics={split['physics']:.3f}) {info}")
+    if sess is not None:
+        st = sess.stats()
+        print(f"session: {st['steps']} steps, {st.get('fast_steps', 0)} "
+              f"fast, {st.get('replans', 0)} replans, "
+              f"{st.get('respecs', 0)} respecs")
     assert np.isfinite(np.asarray(pos)).all()
     print("ok")
 

@@ -10,4 +10,11 @@ python -m pytest -x -q
 # path is oracle-identical to the host loop and writes BENCH_executor.json)
 REPRO_BENCH_SMOKE=1 python -m benchmarks.run figtp
 
+# smoke the dynamic-scene session path: the SPH example on the session
+# (and its legacy A/B flag) + the session-vs-rebuild benchmark, so the
+# SimulationSession path cannot silently rot
+python examples/sph_fluid.py --particles 500 --steps 2
+python examples/sph_fluid.py --particles 500 --steps 2 --rebuild
+REPRO_BENCH_SMOKE=1 python -m benchmarks.run figdyn
+
 echo "ci.sh: OK"

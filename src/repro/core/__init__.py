@@ -9,18 +9,24 @@ Public API:
     plan_bundles, CostModel               section 5.2 bundling
 """
 from .types import (Array, CellGrid, GridSpec, SearchOpts, SearchParams,
-                    SearchResult)
-from .grid import build_cell_grid, choose_grid_spec, box_count
+                    SearchResult, UpdateStats)
+from .grid import (build_cell_grid, choose_grid_spec, box_count,
+                   update_cell_grid)
 from .morton import morton_encode, morton_decode, morton_argsort
 from .schedule import schedule_queries, coherence_statistic
 from .partition import (MegacellStatics, Partition, PartitionPlan,
                         compute_megacells, megacell_statics, plan_partitions)
 from .bundle import Bundle, CostModel, calibrate, exhaustive_best, plan_bundles
+from .schedule import schedule_cells
 from .search import NeighborSearch, neighbor_search, window_search
-from .executor import QueryExecutor
+from .executor import PlanHandle, QueryExecutor
+from .dynamic import (SessionOpts, SimulationSession, StepReport,
+                      session_grid_spec)
 
 __all__ = [
-    "QueryExecutor",
+    "PlanHandle", "QueryExecutor", "SessionOpts", "SimulationSession",
+    "StepReport", "UpdateStats", "schedule_cells", "session_grid_spec",
+    "update_cell_grid",
     "Array", "CellGrid", "GridSpec", "SearchOpts", "SearchParams",
     "SearchResult", "build_cell_grid", "choose_grid_spec", "box_count",
     "morton_encode", "morton_decode", "morton_argsort", "schedule_queries",

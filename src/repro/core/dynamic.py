@@ -1,0 +1,303 @@
+"""Dynamic-scene subsystem: persistent sessions over moving points
+(DESIGN.md section 7).
+
+RTNN's target applications — SPH fluids, MD, point-cloud registration — are
+*frame-stepped*: points move a little each step. The static pipeline pays
+its whole cost again every frame (host `choose_grid_spec` sync, full grid
+rebuild, cold plan/compile caches); the paper's Fig. 15 makes build time a
+first-class cost for exactly this reason, and follow-on work (RT-kNNS
+Unbound; dynamic fixed-radius RT search) centers keeping the index resident
+across rounds. :class:`SimulationSession` is that steady-state path:
+
+* **frozen spec** — the `GridSpec` is planned ONCE (with domain margin and
+  capacity slack so points can drift), so every step's shapes are static
+  and every compiled program stays valid across the whole run;
+* **incremental update** — `grid.update_cell_grid` re-bins the moved
+  points into the existing dense grid in one fused device program under a
+  donated buffer, emitting on-device overflow / out-of-bounds counters and
+  the max-displacement statistic; the only per-step host transfer besides
+  the result sync is the one fused fetch of those scalars;
+* **temporal-coherence plan reuse** — while the max displacement since the
+  last replan stays below ``displacement_frac * cell_size``, the previous
+  Morton schedule permutation and partition plan are replayed verbatim
+  (``QueryExecutor.execute(reuse=...)``): zero host-side replanning, zero
+  recompilation, straight into the cached compiled launch schedule. Reused
+  windows carry a ``reuse_margin_cells`` inflation (the staleness contract,
+  ``partition.inflate_plan_inputs``) so results stay exact under drift;
+* **self-query fast path** — ``step(points)`` (the SPH/MD case) never
+  uploads a second array and shares the update's cell assignment with the
+  query schedule (``schedule.schedule_cells``);
+* **respec fallback** — a nonzero overflow or out-of-bounds counter means
+  the frozen grid can no longer represent the scene exactly; the session
+  falls back to the (rare) host-side respec-and-rebuild: fresh spec, fresh
+  grid, invalidated executor caches (``QueryExecutor.invalidate``).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import math
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .grid import build_cell_grid, choose_grid_spec, update_cell_grid
+from .partition import megacell_statics
+from .search import NeighborSearch
+from .types import (Array, GridSpec, SearchOpts, SearchParams, SearchResult)
+
+
+@dataclasses.dataclass(frozen=True)
+class SessionOpts:
+    """Static knobs of a :class:`SimulationSession`.
+
+    ``displacement_frac``  staleness threshold as a fraction of cell size:
+                           the cached plan is replayed while the max
+                           displacement since its capture stays below
+                           ``displacement_frac * cell_size``. Must be
+                           <= 0.5 for the ``reuse_margin_cells`` default to
+                           keep reused plans exact (a half-cell drift moves
+                           any point's cell by at most one).
+    ``reuse_margin_cells`` window inflation baked into captured plans (see
+                           ``partition.inflate_plan_inputs``): 2 cells
+                           absorb candidate drift + the query's own cell
+                           shift at the default threshold.
+    ``capacity_slack``     cell-capacity headroom of the frozen spec (the
+                           static path plans exactly at the observed max
+                           occupancy; moving points need room to pile up).
+                           Search cost scales with capacity — the default
+                           absorbs the typical +1 occupancy drift without
+                           inflating the candidate gather much; denser
+                           pile-ups fall back to a respec.
+    ``domain_margin_radii`` bounding-box padding of the frozen spec, in
+                           search radii per side (= 4 cells of drift room
+                           at the default cell size) so points can drift
+                           without leaving the grid; escapes respec.
+    ``auto_respec``        respec-and-rebuild when overflow/out-of-bounds
+                           is detected (False: raise instead — for tests
+                           and workloads that must never pay a respec).
+    """
+
+    displacement_frac: float = 0.45
+    reuse_margin_cells: int = 2
+    capacity_slack: float = 1.5
+    domain_margin_radii: float = 1.0
+    max_dim: int = 256
+    auto_respec: bool = True
+
+
+@dataclasses.dataclass
+class StepReport:
+    """Per-step breakdown (the session analogue of ``SearchReport``)."""
+
+    t_update: float = 0.0      # grid update dispatch + fused stats fetch
+    t_plan: float = 0.0        # replan (0.0 on fast steps)
+    t_search: float = 0.0      # executor dispatch + result sync
+    fast: bool = False         # replayed the cached plan
+    replanned: bool = False
+    respecced: bool = False
+    max_disp: float = 0.0      # max displacement since plan anchor
+    overflow: int = 0
+    oob: int = 0
+
+
+def session_grid_spec(points: np.ndarray, radius: float,
+                      sopts: SessionOpts = SessionOpts()) -> GridSpec:
+    """Host-side planning of a session's *frozen* grid: the static policy
+    of ``choose_grid_spec`` plus drift headroom (domain margin, capacity
+    slack) so the spec survives many frames of motion."""
+    return choose_grid_spec(
+        np.asarray(points, np.float32), radius,
+        max_dim=sopts.max_dim,
+        capacity_slack=sopts.capacity_slack,
+        domain_margin=sopts.domain_margin_radii * float(radius),
+    )
+
+
+class SimulationSession:
+    """Persistent neighbor search over a frame-stepped scene.
+
+    >>> sess = SimulationSession(points, SearchParams(radius=0.1, k=8))
+    >>> for _ in range(steps):
+    ...     res = sess.step(points)          # self-query (SPH/MD)
+    ...     points = integrate(points, res)
+
+    ``step(points, queries)`` searches external queries instead; both forms
+    return a ``SearchResult`` in query order, exact w.r.t. the *current*
+    positions (oracle-identical to a fresh ``NeighborSearch``), including
+    across respecs. ``stats()`` exposes the lifecycle counters the tests
+    assert on (steps / fast_steps / replans / respecs / stats_fetches).
+    """
+
+    def __init__(
+        self,
+        points,
+        params: SearchParams,
+        opts: SearchOpts = SearchOpts(),
+        sopts: SessionOpts = SessionOpts(),
+        spec: GridSpec | None = None,
+    ):
+        if not opts.executor:
+            raise ValueError("SimulationSession requires the executor path "
+                             "(SearchOpts.executor=True)")
+        # the staleness contract (inflate_plan_inputs): each of the query
+        # and its candidates may shift ceil(frac) cells before a replan, so
+        # the baked-in window margin must cover both or reuse loses
+        # exactness silently
+        if sopts.displacement_frac <= 0.0:
+            raise ValueError("displacement_frac must be > 0")
+        need = 2 * math.ceil(sopts.displacement_frac)
+        if sopts.reuse_margin_cells < need:
+            raise ValueError(
+                f"reuse_margin_cells={sopts.reuse_margin_cells} cannot keep "
+                f"reused plans exact at displacement_frac="
+                f"{sopts.displacement_frac} (needs >= {need})")
+        self.sopts = sopts
+        pts = jnp.asarray(points, jnp.float32)
+        pts_np = np.asarray(jax.device_get(pts))
+        spec = spec or session_grid_spec(pts_np, params.radius, sopts)
+        self._ns = NeighborSearch(pts_np, params, opts, spec=spec)
+        self._ns.points = pts            # keep the caller's device buffer
+        self._handle = None              # captured PlanHandle (plan anchor)
+        self._anchor_points = pts        # positions at the last replan
+        self._anchor_queries = None      # external-query anchor (if any)
+        self._counters = collections.Counter()
+        self.report = StepReport()
+
+    # -- surface ------------------------------------------------------------
+
+    @property
+    def spec(self) -> GridSpec:
+        return self._ns.spec
+
+    @property
+    def params(self) -> SearchParams:
+        return self._ns.params
+
+    @property
+    def search(self) -> NeighborSearch:
+        """The underlying (session-managed) static search object."""
+        return self._ns
+
+    def stats(self) -> dict:
+        counters = dict(steps=0, fast_steps=0, replans=0, respecs=0,
+                        stats_fetches=0)
+        counters.update({k: int(v) for k, v in self._counters.items()})
+        return {
+            **counters,
+            "last": dataclasses.asdict(self.report),
+            "executor": self._ns.executor.stats(),
+        }
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def _respec(self, pts: Array) -> None:
+        """Rare host-side fallback: the frozen grid overflowed or points
+        escaped it. Replan the spec from current positions, rebuild, and
+        invalidate every plan/compile cache keyed on the old geometry."""
+        ns = self._ns
+        pts_np = np.asarray(jax.device_get(pts))
+        spec = session_grid_spec(pts_np, ns.params.radius, self.sopts)
+        ns.spec = spec
+        ns.points = pts
+        ns.grid = build_cell_grid(pts, spec)
+        ns.statics = megacell_statics(spec.cell_size, ns.params,
+                                      ns.opts.w_max)
+        ns.executor.invalidate()
+        self._handle = None
+        self._counters["respecs"] += 1
+
+    def _replan(self, queries: Array, qcells_dev: Array | None,
+                pts: Array, self_query: bool) -> None:
+        """Capture a fresh schedule+partition+bundle plan anchored at the
+        current positions (host work; amortized across the following fast
+        steps)."""
+        self._handle = self._ns.executor.capture_plan(
+            queries, qcells_dev=qcells_dev,
+            margin=self.sopts.reuse_margin_cells)
+        self._anchor_points = pts
+        self._anchor_queries = None if self_query else queries
+        self._counters["replans"] += 1
+
+    def step(self, points, queries=None) -> SearchResult:
+        """Advance the session to ``points`` and search.
+
+        ``queries=None`` (or ``queries is points``) is the self-query fast
+        path: every particle queries its own neighborhood, the device
+        upload and the cell assignment are shared between build and
+        schedule. Results are in query order, exact for the current
+        positions.
+        """
+        rep = StepReport()
+        t0 = time.perf_counter()
+        ns = self._ns
+        pts = jnp.asarray(points, jnp.float32)
+        self_query = queries is None or queries is points
+        q = pts if self_query else jnp.asarray(queries, jnp.float32)
+
+        # incremental update: one fused device program; anchor of the
+        # displacement statistic is the plan capture, not the last frame
+        anchor = (self._anchor_points
+                  if pts.shape == self._anchor_points.shape else pts)
+        grid, stats, ccoord = update_cell_grid(
+            ns.grid, pts, anchor, use_pallas=ns.opts.use_pallas)
+
+        fetch = [stats.overflow, stats.oob, stats.max_disp2]
+        if (not self_query and self._anchor_queries is not None
+                and q.shape == self._anchor_queries.shape):
+            fetch.append(jnp.max(jnp.sum(
+                (q - self._anchor_queries) ** 2, axis=-1)))
+        fetched = [np.asarray(a) for a in jax.device_get(tuple(fetch))]
+        self._counters["stats_fetches"] += 1
+        overflow, oob, max_d2 = (int(fetched[0]), int(fetched[1]),
+                                 float(fetched[2]))
+        if len(fetched) > 3:
+            max_d2 = max(max_d2, float(fetched[3]))
+        rep.overflow, rep.oob = overflow, oob
+        rep.max_disp = math.sqrt(max(max_d2, 0.0))
+
+        if overflow > 0 or oob > 0:
+            if not self.sopts.auto_respec:
+                # the old grid's buffers were donated to the update; keep
+                # the session consistent (same spec) before raising
+                ns.points = pts
+                ns.grid = grid
+                raise RuntimeError(
+                    f"frozen grid exhausted (overflow={overflow}, "
+                    f"out_of_bounds={oob}) and auto_respec is disabled")
+            self._respec(pts)
+            rep.respecced = True
+            ccoord = None                # old-spec cells are meaningless
+        else:
+            ns.points = pts
+            ns.grid = grid
+        rep.t_update = time.perf_counter() - t0
+
+        threshold = self.sopts.displacement_frac * ns.spec.cell_size
+        stale = (
+            self._handle is None
+            or self._handle.nq != q.shape[0]
+            or pts.shape != self._anchor_points.shape
+            # switching between self-query and external queries always
+            # replans: the captured plan is anchored at the other set's
+            # positions, which the displacement statistic does not track
+            or self_query != (self._anchor_queries is None)
+            or rep.max_disp > threshold
+        )
+        if stale:
+            t0 = time.perf_counter()
+            self._replan(q, ccoord if self_query else None, pts, self_query)
+            rep.t_plan = time.perf_counter() - t0
+            rep.replanned = True
+        else:
+            rep.fast = True
+            self._counters["fast_steps"] += 1
+
+        t0 = time.perf_counter()
+        res = ns.executor.execute(q, reuse=self._handle)
+        rep.t_search = time.perf_counter() - t0
+        self._counters["steps"] += 1
+        self.report = rep
+        return res

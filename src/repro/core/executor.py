@@ -39,8 +39,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from .bundle import bundle_query_sel
-from .partition import (PartitionPlan, compute_megacells, plan_partitions,
-                        trivial_plan)
+from .partition import (PartitionPlan, compute_megacells,
+                        inflate_plan_inputs, plan_partitions, trivial_plan)
+from .schedule import schedule_cells
 from .types import Array, SearchResult
 
 _PLAN_CACHE_MAX = 32
@@ -68,13 +69,45 @@ class LaunchGroup:
         self.n_bundles = n_bundles
 
 
+class PlanHandle:
+    """A captured schedule∘partition∘bundle plan, replayable across frames.
+
+    Produced by ``QueryExecutor.capture_plan`` and replayed with
+    ``execute(queries, reuse=handle)``: the handle owns the Morton schedule
+    permutation (device), the partition plan and launch groups, the
+    edge-padded per-group selection vectors (device, uploaded once), and —
+    on the Pallas path — the pre-padded per-group host cell coordinates.
+    Replaying performs ZERO host-side planning: no schedule, no plan fetch,
+    no partition/bundle recompute, no padding work. The dynamic-scene
+    session (``core/dynamic.py``) holds one handle per plan anchor and
+    replays it while the max-displacement statistic stays below threshold;
+    ``margin`` records the window inflation baked into the plan (the
+    staleness contract, ``partition.inflate_plan_inputs``).
+    """
+
+    __slots__ = ("perm", "plan", "bundles", "groups", "sels_dev",
+                 "qcells_groups", "nq", "margin")
+
+    def __init__(self, perm, plan, bundles, groups, sels_dev, qcells_groups,
+                 nq, margin):
+        self.perm = perm
+        self.plan = plan
+        self.bundles = bundles
+        self.groups = groups
+        self.sels_dev = sels_dev
+        self.qcells_groups = qcells_groups
+        self.nq = nq
+        self.margin = margin
+
+
 class QueryExecutor:
     """Executes a ``NeighborSearch``'s bundle plan device-resident.
 
     Owned by the search object (``ns.executor``); reusable across queries —
     steady-state repeated queries hit the plan cache and compile nothing.
     Surface: ``execute()`` (called by ``NeighborSearch.query``),
-    ``warmup()``, ``stats()``.
+    ``capture_plan()``/``execute(reuse=...)`` (the dynamic-scene session),
+    ``invalidate()`` (respec), ``warmup()``, ``stats()``.
     """
 
     def __init__(self, ns):
@@ -88,9 +121,14 @@ class QueryExecutor:
 
     # -- planning -----------------------------------------------------------
 
-    def _plan(self, queries_s: Array):
+    def _plan(self, queries_s: Array, margin: int = 0):
         """Fetch partition metadata (ONE fused device_get), then plan and
-        group on host — or reuse a cached plan for this fingerprint."""
+        group on host — or reuse a cached plan for this fingerprint.
+
+        ``margin`` inflates every per-query window by that many cells
+        (clamped to w_full) before partitioning — the staleness allowance a
+        capture-for-reuse plan carries (``partition.inflate_plan_inputs``).
+        """
         ns = self.ns
         nq = queries_s.shape[0]
         need_cells = ns.opts.use_pallas
@@ -110,9 +148,13 @@ class QueryExecutor:
 
         if partitioned:
             w_np, s_np, r_np = fetched[:3]
-            key = (nq, _fingerprint(w_np, s_np, r_np))
+            if margin:
+                w_np, s_np = inflate_plan_inputs(
+                    w_np, s_np, margin=margin, w_full=ns.statics.w_full,
+                    w_sph=ns.statics.w_sph)
+            key = (nq, margin, _fingerprint(w_np, s_np, r_np))
         else:
-            key = (nq, b"nopart")
+            key = (nq, margin, b"nopart")
 
         hit = self._plan_cache.get(key)
         if hit is not None:
@@ -129,6 +171,50 @@ class QueryExecutor:
         if len(self._plan_cache) > _PLAN_CACHE_MAX:
             self._plan_cache.popitem(last=False)
         return plan, bundles, groups, qcells
+
+    def _prepare_launch(self, groups, qcells):
+        """Edge-pad each group's selection to its bucket (device) and, on
+        the Pallas path, pre-pad the per-group host cell coordinates."""
+        sels_dev = tuple(jnp.asarray(
+            np.pad(g.sel, (0, g.pad_n - g.sel.shape[0]), mode="edge"),
+            jnp.int32) for g in groups)
+        qcells_groups = None
+        if qcells is not None:
+            qcells_groups = tuple(
+                np.pad(qcells[g.sel],
+                       ((0, g.pad_n - g.sel.shape[0]), (0, 0)), mode="edge")
+                for g in groups)
+        return sels_dev, qcells_groups
+
+    def capture_plan(self, queries, *, qcells_dev: Array | None = None,
+                     margin: int = 0) -> PlanHandle:
+        """Schedule + partition + bundle ``queries`` once and freeze the
+        result into a replayable :class:`PlanHandle`.
+
+        ``qcells_dev`` optionally supplies the queries' device cell
+        coordinates (the self-query fast path reuses the grid update's
+        binning); ``margin`` bakes the staleness allowance into every
+        window so the handle stays exact while displacements remain under
+        the session threshold.
+        """
+        ns = self.ns
+        self._last = collections.Counter()    # scratch for _plan's counters
+        queries = jnp.asarray(queries, jnp.float32)
+        nq = queries.shape[0]
+        if not ns.opts.schedule:
+            perm = jnp.arange(nq, dtype=jnp.int32)
+        elif qcells_dev is not None:
+            perm, _ = schedule_cells(qcells_dev)
+        else:
+            perm, _ = ns._schedule(queries)
+        queries_s = queries[perm]
+        plan, bundles, groups, qcells = self._plan(queries_s, margin=margin)
+        sels_dev, qcells_groups = self._prepare_launch(groups, qcells)
+        self._totals["plan_fetches"] += self._last["plan_fetches"]
+        self._totals["plan_captures"] += 1
+        return PlanHandle(perm=perm, plan=plan, bundles=bundles,
+                          groups=groups, sels_dev=sels_dev,
+                          qcells_groups=qcells_groups, nq=nq, margin=margin)
 
     def _build_groups(self, plan: PartitionPlan,
                       bundles) -> list[LaunchGroup]:
@@ -211,27 +297,26 @@ class QueryExecutor:
             self._launcher_cache.popitem(last=False)
         return launcher
 
-    def _dispatch_loop(self, groups, queries_s, perm, qcells, nq: int,
-                       k: int):
+    def _dispatch_loop(self, groups, queries_s, perm, sels_dev,
+                       qcells_groups, nq: int, k: int):
         """Per-group async dispatch (Pallas path): each launch needs host
         tile-anchor metadata from the plan fetch, so the schedule cannot be
         a single jitted program — but every dispatch is still non-blocking
-        with on-device scatter."""
+        with on-device scatter. Selections and cell coordinates arrive
+        pre-padded (``_prepare_launch``), so a replayed plan does no
+        per-step padding work."""
         ns = self.ns
         out_idx = jnp.full((nq, k), -1, jnp.int32)
         out_d2 = jnp.full((nq, k), jnp.inf, jnp.float32)
         out_cnt = jnp.zeros((nq,), jnp.int32)
         searcher = ns._searcher()
-        for g in groups:
+        for gi, g in enumerate(groups):
             n_b = g.sel.shape[0]
-            sel_dev = jnp.asarray(g.sel, jnp.int32)
+            sel_dev = sels_dev[gi]               # edge-padded to the bucket
             qb = queries_s[sel_dev]
-            qb = jnp.pad(qb, ((0, g.pad_n - n_b), (0, 0)), mode="edge")
             kw = {}
-            if qcells is not None:
-                qc = qcells[g.sel]
-                qc = np.pad(qc, ((0, g.pad_n - n_b), (0, 0)), mode="edge")
-                kw["qcells"] = qc
+            if qcells_groups is not None:
+                kw["qcells"] = qcells_groups[gi]
             sig = (g.w_search, g.skip_test, g.pad_n, ns.opts.query_tile,
                    k, ns.opts.use_pallas)
             if sig not in self._signatures:
@@ -241,7 +326,7 @@ class QueryExecutor:
                 ns.grid, ns.points, qb, ns.spec,
                 g.w_search, ns.params.radius, k,
                 g.skip_test, ns.opts.query_tile, **kw)
-            orig = perm[sel_dev]
+            orig = perm[sel_dev[:n_b]]
             out_idx = out_idx.at[orig].set(idx[:n_b])
             out_d2 = out_d2.at[orig].set(d2[:n_b])
             out_cnt = out_cnt.at[orig].set(cnt[:n_b])
@@ -250,19 +335,35 @@ class QueryExecutor:
 
     # -- execution ----------------------------------------------------------
 
-    def execute(self, queries) -> SearchResult:
+    def execute(self, queries, *,
+                reuse: PlanHandle | None = None) -> SearchResult:
+        """Run one query. With ``reuse`` the given captured plan is replayed
+        verbatim — no schedule, no plan fetch, no partition/bundle work, no
+        padding: pure device dispatch through the cached compiled launch
+        schedule (the dynamic-scene steady state)."""
         ns = self.ns
         self._last = dict(host_syncs=0, plan_fetches=0, launches=0,
                           dispatches=0, compilations=0, bundles=0,
-                          plan_cache_hit=False)
+                          plan_cache_hit=False, plan_reused=False)
         t0 = time.perf_counter()
         queries = jnp.asarray(queries, jnp.float32)
         nq = queries.shape[0]
         k = ns.params.k
 
-        perm, _inv = ns._schedule(queries)
-        queries_s = queries[perm]
-        plan, bundles, groups, qcells = self._plan(queries_s)
+        if reuse is not None:
+            if reuse.nq != nq:
+                raise ValueError(f"reused plan was captured for nq="
+                                 f"{reuse.nq}, got {nq} queries")
+            perm = reuse.perm
+            queries_s = queries[perm]
+            plan, bundles, groups = reuse.plan, reuse.bundles, reuse.groups
+            sels_dev, qcells_groups = reuse.sels_dev, reuse.qcells_groups
+            self._last["plan_reused"] = True
+        else:
+            perm, _inv = ns._schedule(queries)
+            queries_s = queries[perm]
+            plan, bundles, groups, qcells = self._plan(queries_s)
+            sels_dev, qcells_groups = self._prepare_launch(groups, qcells)
         ns.report.t_opt = time.perf_counter() - t0
         ns.report.num_partitions = plan.num_partitions
         ns.report.bundles = bundles
@@ -272,17 +373,14 @@ class QueryExecutor:
         t0 = time.perf_counter()
         launcher = self._get_launcher(groups, nq)
         if launcher is not None:
-            # edge-pad each selection to its bucket so the launcher only
-            # ever sees bucketed shapes (zero retraces on count drift)
-            sels = tuple(jnp.asarray(
-                np.pad(g.sel, (0, g.pad_n - g.sel.shape[0]), mode="edge"),
-                jnp.int32) for g in groups)
+            # selections are edge-padded to their buckets so the launcher
+            # only ever sees bucketed shapes (zero retraces on count drift)
             out_idx, out_d2, out_cnt = launcher(
-                ns.grid, ns.points, queries_s, perm, sels)
+                ns.grid, ns.points, queries_s, perm, sels_dev)
             self._last["dispatches"] = 1
         else:
             out_idx, out_d2, out_cnt = self._dispatch_loop(
-                groups, queries_s, perm, qcells, nq, k)
+                groups, queries_s, perm, sels_dev, qcells_groups, nq, k)
 
         # one-sync contract: the single blocking materialization
         jax.block_until_ready((out_idx, out_d2, out_cnt))
@@ -297,9 +395,23 @@ class QueryExecutor:
                     "plan_fetches", "compilations"):
             self._totals[key] += self._last[key]
         self._totals["plan_cache_hits"] += int(self._last["plan_cache_hit"])
+        self._totals["plan_reuses"] += int(self._last["plan_reused"])
 
         return SearchResult(indices=out_idx, distances2=out_d2,
                             counts=out_cnt)
+
+    def invalidate(self) -> None:
+        """Drop every cached plan, compiled launch schedule, and signature.
+
+        A respec (``core/dynamic.py``) changes the grid spec that cached
+        launchers close over and that every plan was computed against —
+        replaying any of them would search the wrong geometry, so the
+        caches are cleared wholesale and outstanding ``PlanHandle``s must
+        be discarded by their owner."""
+        self._plan_cache.clear()
+        self._launcher_cache.clear()
+        self._signatures.clear()
+        self._totals["invalidations"] += 1
 
     # -- surface ------------------------------------------------------------
 

@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .types import Array, CellGrid, GridSpec
+from .types import Array, CellGrid, GridSpec, UpdateStats
 
 
 def choose_grid_spec(
@@ -25,6 +25,7 @@ def choose_grid_spec(
     max_dim: int = 256,
     capacity: int | None = None,
     capacity_slack: float = 1.0,
+    domain_margin: float = 0.0,
 ) -> GridSpec:
     """Host-side planning of the static grid parameters.
 
@@ -34,11 +35,17 @@ def choose_grid_spec(
     within ``max_dim`` per axis. ``capacity`` is the max cell occupancy, read
     from the data exactly like JAX-MD capacity planning; the build reports
     overflow if exceeded (asserted zero in tests).
+
+    ``domain_margin`` pads the bounding box by that many world units on every
+    side before sizing — dynamic scenes (``core/dynamic.py``) use it so points
+    can drift without leaving the frozen grid. Degenerate extents (identical
+    or coplanar point sets) are clamped to ``radius`` per axis so cells never
+    collapse to zero size and dims stay finite.
     """
     points = np.asarray(points, dtype=np.float32)
-    lo = points.min(axis=0)
-    hi = points.max(axis=0)
-    extent = np.maximum(hi - lo, 1e-6)
+    lo = points.min(axis=0) - domain_margin
+    hi = points.max(axis=0) + domain_margin
+    extent = np.maximum(hi - lo, max(float(radius), 1e-6))
     if cell_size is None:
         # cells finer than the radius (paper: smallest cell size memory
         # allows) so megacells exist: w_sph >= 1 needs cell <= r/(2*sqrt(3))
@@ -73,15 +80,19 @@ def build_cell_grid(points: Array, spec: GridSpec,
     and counted in ``overflow``. ``origin`` optionally overrides the static
     spec origin (distributed slabs).
     """
-    n = points.shape[0]
     ccoord = spec.cell_of(points, origin)
-    flat = spec.flat_cell(ccoord)
+    return _grid_from_flat(spec.flat_cell(ccoord), points.shape[0], spec)
 
+
+def _grid_from_flat(flat: Array, n: int, spec: GridSpec) -> CellGrid:
+    """Dense grid + counts + SAT from precomputed flat cell ids (shared by
+    the static build and the dynamic update path)."""
     order = jnp.argsort(flat, stable=True)
     flat_sorted = flat[order]
     # rank within cell = position - first position of this cell id
     first_of_cell = jnp.searchsorted(flat_sorted, flat_sorted, side="left")
-    rank_sorted = jnp.arange(n, dtype=jnp.int32) - first_of_cell.astype(jnp.int32)
+    rank_sorted = (jnp.arange(n, dtype=jnp.int32)
+                   - first_of_cell.astype(jnp.int32))
     rank = jnp.zeros((n,), jnp.int32).at[order].set(rank_sorted)
 
     keep = rank < spec.capacity
@@ -107,6 +118,76 @@ def build_cell_grid(points: Array, spec: GridSpec,
         sat=sat,
         overflow=overflow,
     )
+
+
+# ---------------------------------------------------------------------------
+# dynamic-scene incremental update (core/dynamic.py; DESIGN.md section 7)
+# ---------------------------------------------------------------------------
+
+def _bin_and_stats(spec: GridSpec, points: Array,
+                   anchor_points: Array) -> tuple[Array, Array, Array]:
+    """Unclamped binning + motion statistics (jnp path).
+
+    Returns (ccoord [N,3] clipped, oob, max_disp2): ``oob`` counts points
+    whose true cell lies outside the frozen grid (clamping them would bin
+    them into a wrong border cell, losing exactness — the session respecs
+    instead), ``max_disp2`` is the max squared displacement vs the positions
+    the current plan was captured at (the temporal-coherence statistic).
+    """
+    o = jnp.asarray(spec.origin, points.dtype)
+    c = jnp.floor((points - o) / spec.cell_size).astype(jnp.int32)
+    hi = jnp.asarray([d - 1 for d in spec.dims], jnp.int32)
+    oob = jnp.sum(jnp.any((c < 0) | (c > hi), axis=-1).astype(jnp.int32))
+    max_d2 = jnp.max(jnp.sum((points - anchor_points) ** 2, axis=-1))
+    return jnp.clip(c, 0, hi), oob, max_d2
+
+
+def _update_impl(grid: CellGrid, points: Array, anchor_points: Array,
+                 use_pallas: bool):
+    spec = grid.spec
+    if use_pallas:
+        from ..kernels.ops import INTERPRET
+        from ..kernels.update_tile import bin_disp_tile
+        ccoord, oob, max_d2 = bin_disp_tile(points, anchor_points, spec,
+                                            interpret=INTERPRET)
+    else:
+        ccoord, oob, max_d2 = _bin_and_stats(spec, points, anchor_points)
+    new = _grid_from_flat(spec.flat_cell(ccoord), points.shape[0], spec)
+    stats = UpdateStats(overflow=new.overflow, oob=oob, max_disp2=max_d2)
+    return new, stats, ccoord
+
+
+_update_donated = partial(jax.jit, static_argnames=("use_pallas",),
+                          donate_argnums=(0,))(_update_impl)
+_update_plain = partial(jax.jit,
+                        static_argnames=("use_pallas",))(_update_impl)
+
+
+def update_cell_grid(
+    grid: CellGrid,
+    points: Array,
+    anchor_points: Array,
+    *,
+    use_pallas: bool = False,
+    donate: bool | None = None,
+) -> tuple[CellGrid, UpdateStats, Array]:
+    """Re-bin moved ``points`` into the *frozen* spec of ``grid``.
+
+    One fused device program replacing the per-frame teardown/rebuild of the
+    static path: binning, overflow/out-of-bounds counters, and the
+    max-displacement statistic come out of a single dispatch, and the old
+    grid's buffers are donated (``donate=None`` auto-enables off-CPU; the CPU
+    backend ignores donation and would warn) so the dense array is updated
+    in place at the XLA level rather than double-allocated.
+
+    Returns ``(grid', stats, ccoord)`` — ``ccoord`` is the per-point cell
+    assignment, shared with query scheduling on the self-query fast path
+    (``schedule_cells``) so it is computed exactly once per step.
+    """
+    if donate is None:
+        donate = jax.default_backend() != "cpu"
+    fn = _update_donated if donate else _update_plain
+    return fn(grid, points, anchor_points, use_pallas=use_pallas)
 
 
 def _summed_area_table(counts: Array) -> Array:

@@ -170,6 +170,31 @@ def trivial_plan(nq: int, w_full: int) -> PartitionPlan:
                          w_full=w_full)
 
 
+def inflate_plan_inputs(
+    w_search: np.ndarray,
+    skip: np.ndarray,
+    *,
+    margin: int,
+    w_full: int,
+    w_sph: int,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Staleness contract for cross-frame plan reuse (DESIGN.md section 7).
+
+    A partition plan captured at frame t stays *exact* at frame t+s as long
+    as every point/query has drifted less than half a cell since capture,
+    provided each per-query window is inflated by ``margin`` cells (one cell
+    absorbs candidate drift, one absorbs the query's own cell shift — the
+    session's displacement threshold is calibrated to this). Windows stay
+    clamped to ``w_full`` (which always covers the full r-ball, so inflation
+    never loses exactness), and the sphere-test skip is revoked for any
+    window the inflation pushed past the inscribed ring ``w_sph``.
+    """
+    w = np.minimum(w_search.astype(np.int64) + int(margin),
+                   int(w_full)).astype(w_search.dtype)
+    s = skip.astype(bool) & (w <= w_sph)
+    return w, s
+
+
 def plan_partitions(
     w_search: Array,
     skip: Array,

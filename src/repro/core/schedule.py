@@ -29,10 +29,23 @@ def schedule_queries(spec: GridSpec, queries: Array) -> tuple[Array, Array]:
     ``perm`` maps scheduled slot -> original query index; ``inv_perm`` maps
     original index -> scheduled slot (used to scatter results back).
     """
-    code = morton_encode(spec.cell_of(queries))
+    return schedule_cells(spec.cell_of(queries))
+
+
+@jax.jit
+def schedule_cells(ccoord: Array) -> tuple[Array, Array]:
+    """Schedule from precomputed integer cell coordinates [Nq, 3].
+
+    The dynamic-scene self-query fast path (``core/dynamic.py``) shares ONE
+    cell assignment between the grid update and the query schedule — the
+    incremental update already binned the points, so replanning a session
+    never recomputes ``cell_of``.
+    """
+    code = morton_encode(ccoord)
     perm = jnp.argsort(code)
-    n = queries.shape[0]
-    inv = jnp.zeros((n,), jnp.int32).at[perm].set(jnp.arange(n, dtype=jnp.int32))
+    n = ccoord.shape[0]
+    inv = jnp.zeros((n,), jnp.int32).at[perm].set(
+        jnp.arange(n, dtype=jnp.int32))
     return perm, inv
 
 

@@ -87,6 +87,34 @@ class CellGrid:
                    overflow=overflow)
 
 
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class UpdateStats:
+    """On-device counters of one incremental grid update (all scalar int32 /
+    f32 device arrays; fetched in ONE fused transfer per step by the
+    session).
+
+    ``overflow``   points dropped because their cell exceeded capacity.
+    ``oob``        points whose true cell lies outside the frozen grid —
+                   binning them clamped would lose exactness, so any nonzero
+                   value triggers the session's respec-and-rebuild fallback.
+    ``max_disp2``  max squared displacement vs the plan-anchor positions;
+                   compared against the staleness threshold to decide
+                   whether the cached schedule/partition plan is reusable.
+    """
+
+    overflow: Array
+    oob: Array
+    max_disp2: Array
+
+    def tree_flatten(self):
+        return (self.overflow, self.oob, self.max_disp2), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves)
+
+
 @dataclasses.dataclass(frozen=True)
 class SearchParams:
     """Static parameters of one neighbor search call."""

@@ -32,6 +32,7 @@ import numpy as np
 from .distance_tile import distance_tile
 from .knn_tile import knn_tile
 from .range_tile import range_count
+from .update_tile import bin_disp_tile
 
 INTERPRET = os.environ.get("PALLAS_INTERPRET", "1") != "0"
 
@@ -77,5 +78,5 @@ def window_search_pallas(
     return idx, d2, counts
 
 
-__all__ = ["distance_tile", "knn_tile", "range_count",
+__all__ = ["bin_disp_tile", "distance_tile", "knn_tile", "range_count",
            "window_search_pallas", "INTERPRET"]

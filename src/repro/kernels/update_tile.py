@@ -1,0 +1,105 @@
+"""Pallas TPU kernel: fused re-binning + motion statistics for dynamic
+scenes (DESIGN.md section 7).
+
+One pass over the moved points produces everything the incremental grid
+update needs: the clipped integer cell assignment (consumed by the dense
+scatter in ``core/grid.py`` AND by query scheduling on the self-query fast
+path), the out-of-bounds count (points whose true cell left the frozen
+grid), and the max squared displacement vs the plan-anchor positions (the
+temporal-coherence staleness statistic). The jnp path materializes three
+separate intermediates for these; here each [TN, 8] position tile is read
+from VMEM once and reduced in-register.
+
+Grid: (N / TN,). Coordinates are padded 3 -> 8 sublanes like the other
+kernels in this package (zero columns change no statistic: they are masked
+out of the bounds test and contribute 0 to displacement).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TN = 256
+COORD_PAD = 8
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "tn", "interpret"))
+def bin_disp_tile(
+    points: jax.Array,
+    anchor_points: jax.Array,
+    spec,                     # core.types.GridSpec (hashable/static)
+    *,
+    tn: int = DEFAULT_TN,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused binning + stats of ``points`` [N, 3] against ``anchor_points``.
+
+    Returns ``(ccoord [N, 3] int32 clipped, oob int32, max_disp2 f32)`` —
+    bit-identical to the jnp path in ``core.grid._bin_and_stats``.
+    """
+    n = points.shape[0]
+    npad = (-n) % tn
+    # rows: edge-replicate (real coordinates, masked out of the reductions
+    # by row index); columns: zero-pad 3 -> 8 sublanes
+    pp = jnp.pad(points.astype(jnp.float32), ((0, npad), (0, 0)),
+                 mode="edge")
+    ap = jnp.pad(anchor_points.astype(jnp.float32), ((0, npad), (0, 0)),
+                 mode="edge")
+    pp = jnp.pad(pp, ((0, 0), (0, COORD_PAD - 3)))
+    ap = jnp.pad(ap, ((0, 0), (0, COORD_PAD - 3)))
+    n_tiles = pp.shape[0] // tn
+
+    origin = jnp.asarray(tuple(spec.origin) + (0.0,) * (COORD_PAD - 3),
+                         jnp.float32)[None, :]
+    hi = jnp.asarray(tuple(d - 1 for d in spec.dims)
+                     + (0,) * (COORD_PAD - 3), jnp.int32)[None, :]
+    inv_cell = 1.0 / spec.cell_size
+
+    def kernel(p_ref, a_ref, o_ref, h_ref, cc_ref, oob_ref, d2_ref):
+        i = pl.program_id(0)
+        p = p_ref[...]                                      # [TN, 8]
+        a = a_ref[...]
+        o = o_ref[...]                                      # [1, 8]
+        h = h_ref[...]                                      # [1, 8]
+        axis = jax.lax.broadcasted_iota(jnp.int32, (tn, COORD_PAD), 1)
+        real_col = axis < 3
+        row = i * tn + jax.lax.broadcasted_iota(jnp.int32, (tn, 1), 0)
+        real_row = row < n                                  # [TN, 1]
+
+        c = jnp.floor((p - o) * inv_cell).astype(jnp.int32)
+        escaped = ((c < 0) | (c > h)) & real_col
+        oob_row = jnp.any(escaped, axis=1, keepdims=True)   # [TN, 1]
+        oob_ref[0, 0] = jnp.sum(
+            (oob_row & real_row).astype(jnp.int32))
+
+        d = p - a                                           # pad cols: 0
+        d2 = jnp.sum(d * d, axis=1, keepdims=True)          # [TN, 1]
+        d2_ref[0, 0] = jnp.max(jnp.where(real_row, d2, 0.0))
+
+        cc_ref[...] = jnp.clip(c, 0, h)
+
+    cc, oob_part, d2_part = pl.pallas_call(
+        kernel,
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((tn, COORD_PAD), lambda i: (i, 0)),
+            pl.BlockSpec((tn, COORD_PAD), lambda i: (i, 0)),
+            pl.BlockSpec((1, COORD_PAD), lambda i: (0, 0)),
+            pl.BlockSpec((1, COORD_PAD), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tn, COORD_PAD), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((pp.shape[0], COORD_PAD), jnp.int32),
+            jax.ShapeDtypeStruct((n_tiles, 1), jnp.int32),
+            jax.ShapeDtypeStruct((n_tiles, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pp, ap, origin, hi)
+    return cc[:n, :3], jnp.sum(oob_part), jnp.max(d2_part)

@@ -51,3 +51,50 @@ def test_capacity_overflow_reported(rng):
     grid = build_cell_grid(jnp.asarray(pts), spec)
     assert int(grid.overflow) == 42
     assert int(grid.counts.max()) == 8
+
+
+def _assert_spec_sane(spec, radius):
+    assert spec.cell_size > 0 and np.isfinite(spec.cell_size)
+    assert all(isinstance(d, int) and 0 < d < 64 for d in spec.dims)
+    assert all(np.isfinite(o) for o in spec.origin)
+    # the full-radius window must fit: extent was clamped to >= radius
+    assert all(d * spec.cell_size >= radius for d in spec.dims)
+
+
+def test_degenerate_extent_identical_points(rng):
+    """Regression: a zero-extent bbox (all points identical) must not
+    produce zero-size cells, NaN/degenerate dims, or wrong results —
+    the extent clamps to ``radius`` per axis."""
+    from repro.core import neighbor_search
+    from repro.kernels.ref import brute_force_search
+
+    pts = np.full((40, 3), 0.25, np.float32)
+    spec = choose_grid_spec(pts, radius=0.05)
+    _assert_spec_sane(spec, 0.05)
+    res = neighbor_search(pts, pts[:7], 0.05, 8, mode="knn")
+    _oi, _od, oc = brute_force_search(jnp.asarray(pts),
+                                      jnp.asarray(pts[:7]), 0.05, 8)
+    np.testing.assert_array_equal(np.asarray(oc), np.asarray(res.counts))
+    np.testing.assert_allclose(np.asarray(res.distances2), 0.0, atol=1e-6)
+
+
+def test_degenerate_extent_coplanar_points(rng):
+    """Regression: one zero-extent axis (coplanar set) — dims stay finite
+    and small on the flat axis and the search stays oracle-exact."""
+    from repro.core import neighbor_search
+    from repro.kernels.ref import brute_force_search
+
+    pts = rng.random((300, 3)).astype(np.float32)
+    pts[:, 2] = 0.4                              # flat in z
+    r, k = 0.08, 8
+    spec = choose_grid_spec(pts, radius=r)
+    _assert_spec_sane(spec, r)
+    qs = pts[::5]
+    res = neighbor_search(pts, qs, r, k, mode="knn", knn_window="exact")
+    _oi, od, oc = brute_force_search(jnp.asarray(pts), jnp.asarray(qs),
+                                     r, k)
+    d_ref = np.where(np.isinf(np.asarray(od)), -1.0, np.asarray(od))
+    d_got = np.where(np.isinf(np.asarray(res.distances2)), -1.0,
+                     np.asarray(res.distances2))
+    np.testing.assert_allclose(d_got, d_ref, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(oc), np.asarray(res.counts))
