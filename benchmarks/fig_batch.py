@@ -1,0 +1,141 @@
+"""Multi-scene batching: one vmapped functional query over B stacked
+same-spec scenes vs B sequential ``SimulationSession``s (DESIGN.md
+section 8 — the ROADMAP's "multi-session batching" item).
+
+Both paths advance B independent drifting scenes through the IDENTICAL
+frame trajectories and self-query every frame. The sequential path is B
+persistent sessions stepped back to back (each already device-resident
+with plan replay); the batched path is ONE jitted program —
+``vmap(update_index + with_anchor + query)`` over the stacked scene
+leaves — so B scenes cost one dispatch and XLA batches the whole
+pipeline. Correctness is asserted scene-by-scene against the session
+results every timed frame.
+
+Writes per-case rows to ``BENCH_batch.json`` at the repo root.
+``REPRO_BENCH_SMOKE=1`` shrinks the workload for CI (scripts/ci.sh).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.api as api
+from repro.core import (SearchOpts, SearchParams, SimulationSession,
+                        choose_grid_spec)
+
+from .common import emit
+
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE", "0") == "1"
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_batch.json")
+
+
+def _trajectories(b: int, n: int, steps: int, sigma: float,
+                  seed: int) -> list[list[np.ndarray]]:
+    """B independent coherently-drifting clouds (same regime as figdyn)."""
+    out = []
+    for s in range(b):
+        rng = np.random.default_rng(seed + s)
+        pos = rng.random((n, 3)).astype(np.float32)
+        vel = rng.normal(0, sigma, (n, 3)).astype(np.float32)
+        frames = [pos]
+        for _ in range(steps - 1):
+            vel = 0.9 * vel + rng.normal(0, 0.3 * sigma,
+                                         (n, 3)).astype(np.float32)
+            pos = np.clip(pos + vel, 0.0, 1.0).astype(np.float32)
+            frames.append(pos)
+        out.append(frames)
+    return out
+
+
+def _assert_close(a, b):
+    da = np.where(np.isinf(np.asarray(a.distances2)), -1.0,
+                  np.asarray(a.distances2))
+    db = np.where(np.isinf(np.asarray(b.distances2)), -1.0,
+                  np.asarray(b.distances2))
+    np.testing.assert_allclose(da, db, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(a.counts),
+                                  np.asarray(b.counts))
+
+
+def run(k=16):
+    if SMOKE:
+        sizes, n, steps, radius = [2], 1_500, 5, 0.05
+    else:
+        sizes, n, steps, radius = [2, 4, 8], 6_000, 10, 0.04
+    results = {}
+    for b in sizes:
+        name = f"B{b}-{n // 1000}k"
+        trajs = _trajectories(b, n, steps, sigma=0.03 * radius / 4.0,
+                              seed=11)
+        params = SearchParams(radius=radius, k=k, mode="range")
+
+        # one shared spec so the B scenes share one trace/compile; sized
+        # over the union so no scene can overflow it
+        spec = choose_grid_spec(
+            np.concatenate([t[0] for t in trajs]), radius,
+            capacity_slack=1.5, domain_margin=radius)
+
+        # --- sequential baseline: B persistent sessions -------------------
+        sessions = [SimulationSession(t[0], params, SearchOpts(), spec=spec)
+                    for t in trajs]
+        for sess, t in zip(sessions, trajs):
+            sess.step(t[0])                       # warm compile + plan
+
+        # --- batched path: ONE vmapped update+query program ---------------
+        def one_scene(idx, pts):
+            idx2, _stats = api.update_index(idx, pts)
+            idx2 = idx2.with_anchor(pts)
+            return idx2, api.query(idx2, pts)
+
+        batch_step = jax.jit(jax.vmap(one_scene))
+        idxs = [api.build_index(t[0], params, SearchOpts(), spec=spec)
+                for t in trajs]
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *idxs)
+        stacked, _ = batch_step(stacked, jnp.stack(
+            [jnp.asarray(t[0]) for t in trajs]))     # warm compile
+
+        ts_seq, ts_bat = [], []
+        for f in range(1, steps):
+            frames = [t[f] for t in trajs]
+            t0 = time.perf_counter()
+            res_seq = [sess.step(fr) for sess, fr in zip(sessions, frames)]
+            jax.block_until_ready([r.indices for r in res_seq])
+            ts_seq.append(time.perf_counter() - t0)
+
+            fstack = jnp.stack([jnp.asarray(fr) for fr in frames])
+            t0 = time.perf_counter()
+            stacked, res_bat = batch_step(stacked, fstack)
+            jax.block_until_ready(res_bat.indices)
+            ts_bat.append(time.perf_counter() - t0)
+
+            for s in range(b):
+                _assert_close(
+                    type(res_seq[s])(indices=res_bat.indices[s],
+                                     distances2=res_bat.distances2[s],
+                                     counts=res_bat.counts[s]),
+                    res_seq[s])
+
+        t_s = float(np.median(ts_seq))
+        t_b = float(np.median(ts_bat))
+        row = {
+            "scenes": b,
+            "points_per_scene": n,
+            "sequential_us_per_frame": t_s * 1e6,
+            "vmapped_us_per_frame": t_b * 1e6,
+            "speedup": t_s / t_b,
+        }
+        results[name] = row
+        emit(f"figbatch/{name}/sequential", t_s / (b * n),
+             "B sessions back to back")
+        emit(f"figbatch/{name}/vmapped", t_b / (b * n),
+             f"speedup={row['speedup']:.2f}x;one program")
+
+    with open(OUT_PATH, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return results

@@ -6,9 +6,17 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 python -m pytest -x -q
 
+# the public-API snapshot gate on its own (fast, fails loud when repro.api
+# exports change without a CHANGES.md note — see tests/test_api.py)
+python -m pytest -x -q tests/test_api.py::test_public_api_snapshot
+
 # smoke the executor benchmark (shrunken workloads; asserts the executor
 # path is oracle-identical to the host loop and writes BENCH_executor.json)
 REPRO_BENCH_SMOKE=1 python -m benchmarks.run figtp
+
+# smoke the multi-scene batching benchmark (vmapped functional query vs
+# sequential sessions; asserts scene-by-scene equality, BENCH_batch.json)
+REPRO_BENCH_SMOKE=1 python -m benchmarks.run figbatch
 
 # smoke the dynamic-scene session path: the SPH example on the session
 # (and its legacy A/B flag) + the session-vs-rebuild benchmark, so the

@@ -1,0 +1,9 @@
+"""``repro.api`` — the functional pytree-first neighbor-search API.
+
+Pure ``build_index / query / update_index`` core that composes under
+``jax.jit``, ``jax.vmap``, and ``shard_map``; see ``repro/core/api.py``
+and DESIGN.md section 8. The class-based surfaces (``NeighborSearch``,
+``SimulationSession``) in ``repro.core`` are shims over this module.
+"""
+from .core.api import *  # noqa: F401,F403
+from .core.api import __all__  # noqa: F401

@@ -1,7 +1,10 @@
 """RTNN-on-TPU core library: the paper's contribution as composable JAX.
 
 Public API:
-    NeighborSearch, neighbor_search       top-level search (Listings 1-3)
+    build_index, query, update_index      pure functional core (repro.api,
+    NeighborIndex, QueryPlan              DESIGN.md section 8)
+    NeighborSearch, neighbor_search       eager host-planned search
+                                          (Listings 1-3; shim over the core)
     SearchParams, SearchOpts, SearchResult, GridSpec
     build_cell_grid, choose_grid_spec     acceleration structure
     schedule_queries                      section 4 query scheduling
@@ -11,27 +14,36 @@ Public API:
 from .types import (Array, CellGrid, GridSpec, SearchOpts, SearchParams,
                     SearchResult, UpdateStats)
 from .grid import (build_cell_grid, choose_grid_spec, box_count,
-                   update_cell_grid)
+                   update_cell_grid, update_cell_grid_traced)
 from .morton import morton_encode, morton_decode, morton_argsort
-from .schedule import schedule_queries, coherence_statistic
+from .schedule import (schedule_queries, schedule_by_level,
+                       coherence_statistic)
 from .partition import (MegacellStatics, Partition, PartitionPlan,
-                        compute_megacells, megacell_statics, plan_partitions)
+                        compute_megacells, launch_signatures,
+                        megacell_statics, plan_partitions, signature_levels)
 from .bundle import Bundle, CostModel, calibrate, exhaustive_best, plan_bundles
 from .schedule import schedule_cells
-from .search import NeighborSearch, neighbor_search, window_search
+from .search import (NeighborSearch, neighbor_search, window_search,
+                     window_tile_search)
+from .api import (NeighborIndex, QueryPlan, build_index, cached_searcher,
+                  execute_plan, plan_query, query, update_index)
 from .executor import PlanHandle, QueryExecutor
 from .dynamic import (SessionOpts, SimulationSession, StepReport,
                       session_grid_spec)
 
 __all__ = [
+    "NeighborIndex", "QueryPlan", "build_index", "cached_searcher",
+    "execute_plan", "plan_query", "query", "update_index",
     "PlanHandle", "QueryExecutor", "SessionOpts", "SimulationSession",
     "StepReport", "UpdateStats", "schedule_cells", "session_grid_spec",
-    "update_cell_grid",
+    "update_cell_grid", "update_cell_grid_traced",
     "Array", "CellGrid", "GridSpec", "SearchOpts", "SearchParams",
     "SearchResult", "build_cell_grid", "choose_grid_spec", "box_count",
     "morton_encode", "morton_decode", "morton_argsort", "schedule_queries",
-    "coherence_statistic", "MegacellStatics", "Partition", "PartitionPlan",
-    "compute_megacells", "megacell_statics", "plan_partitions", "Bundle",
+    "schedule_by_level", "coherence_statistic", "MegacellStatics",
+    "Partition", "PartitionPlan", "compute_megacells", "launch_signatures",
+    "megacell_statics", "plan_partitions", "signature_levels", "Bundle",
     "CostModel", "calibrate", "exhaustive_best", "plan_bundles",
     "NeighborSearch", "neighbor_search", "window_search",
+    "window_tile_search",
 ]

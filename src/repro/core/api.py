@@ -1,0 +1,350 @@
+"""Functional pytree-first core: ``build_index / query / update_index`` as
+pure, traceable JAX (DESIGN.md section 8).
+
+The host-orchestrated surfaces (``NeighborSearch``, ``SimulationSession``,
+``distributed_neighbor_search``) cannot be called from inside a user's
+jitted step function: their planning fetches partition metadata to the host
+mid-pipeline. This module is the pure core they are shims over — the whole
+search is a traceable JAX value, so
+
+  * ``jax.jit(query)`` runs the full schedule→partition→search pipeline as
+    one program with zero mid-trace host syncs;
+  * ``jax.vmap(query)`` over a stacked batch of same-spec scenes IS
+    multi-scene batching (the ROADMAP's "multi-session batching" item);
+  * ``shard_map`` over stacked scene leaves distributes it;
+  * ``lax.cond`` over ``update_index`` + ``plan_query``/``execute_plan``
+    is the dynamic session's device-resident staleness branch
+    (``core/dynamic.py``).
+
+**Static-signature tracing contract.** The host executor plans
+data-dependent launch groups (fetch megacell metadata, group bundles by
+``(w_search, skip_test)``, pad to buckets). A traced query cannot shape
+launches from data, so the traced path enumerates, host-statically, every
+launch signature a query could be assigned — the megacell rings
+``0..w_loop`` mapped through the paper's window sizing plus the
+full-radius fallback (``partition.launch_signatures``) — sorts queries by
+``(signature level, Morton)`` on device, and dispatches each query *tile*
+through ``lax.switch`` to its signature's branch. Each tile pays only its
+own window's gather cost (the partition win), every branch has static
+shapes, and the signature set is bounded exactly like the executor's
+padded-bucket signatures. The eager host-planned executor remains the
+optimizing path (it additionally folds bundles by the cost model);
+``SearchOpts.w_ladder`` coarsens the traced ladder explicitly.
+
+``use_pallas`` applies to the eager executor path only: the Pallas search
+kernel derives its tile-window anchors from host metadata (DESIGN.md
+section 3 open item), so the traced path always uses the jnp tile search.
+The Pallas *update* kernel is traceable and is honored by
+``update_index``.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import hashlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .grid import build_cell_grid, choose_grid_spec, update_cell_grid_traced
+from .partition import (MegacellStatics, compute_megacells, launch_signatures,
+                        megacell_statics, signature_levels)
+from .schedule import schedule_by_level
+from .search import window_tile_search
+from .types import (Array, CellGrid, GridSpec, SearchOpts, SearchParams,
+                    SearchResult, UpdateStats)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class NeighborIndex:
+    """The built search structure as a registered pytree.
+
+    Spec-static aux (hashable, shared by every scene in a vmap batch):
+    ``params``, ``opts``, ``statics``; the ``GridSpec`` rides in the
+    ``CellGrid`` subtree's own aux. Leaves: ``points`` [N, 3], the grid
+    arrays, and ``anchor_points`` — the positions the current plan was
+    captured at (the staleness statistic of ``update_index`` is measured
+    against them; ``with_anchor`` re-anchors after a replan).
+    """
+
+    params: SearchParams
+    opts: SearchOpts
+    statics: MegacellStatics
+    points: Array
+    grid: CellGrid
+    anchor_points: Array
+
+    @property
+    def spec(self) -> GridSpec:
+        return self.grid.spec
+
+    def with_anchor(self, anchor_points: Array) -> "NeighborIndex":
+        return dataclasses.replace(self, anchor_points=anchor_points)
+
+    def tree_flatten(self):
+        return ((self.points, self.grid, self.anchor_points),
+                (self.params, self.opts, self.statics))
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        params, opts, statics = aux
+        points, grid, anchor = leaves
+        return cls(params=params, opts=opts, statics=statics,
+                   points=points, grid=grid, anchor_points=anchor)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QueryPlan:
+    """A device-resident, replayable schedule∘partition plan.
+
+    Static aux: query count ``nq``, tile size, and the launch-signature
+    ``ladder`` the levels index into. Leaves: ``perm`` — the composed
+    (level, Morton) permutation, edge-padded to a tile multiple (padded
+    slots repeat the last scheduled query, so duplicate scatter writes are
+    idempotent) — and ``tile_levels``, each tile's ``lax.switch`` branch.
+    Both branches of the session's staleness ``lax.cond`` return one of
+    these, which is what makes plan replay a device decision.
+    """
+
+    nq: int
+    tile: int
+    ladder: tuple
+    perm: Array          # [Np] int32, Np % tile == 0
+    tile_levels: Array   # [Np // tile] int32
+
+    def tree_flatten(self):
+        return ((self.perm, self.tile_levels),
+                (self.nq, self.tile, self.ladder))
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        nq, tile, ladder = aux
+        perm, tile_levels = leaves
+        return cls(nq=nq, tile=tile, ladder=ladder, perm=perm,
+                   tile_levels=tile_levels)
+
+
+# ---------------------------------------------------------------------------
+# build / update
+# ---------------------------------------------------------------------------
+
+def build_index(points, params: SearchParams,
+                opts: SearchOpts = SearchOpts(), *,
+                spec: GridSpec | None = None) -> NeighborIndex:
+    """Build a :class:`NeighborIndex` over ``points`` [N, 3].
+
+    Pure and traceable when ``spec`` is given (the grid build is a bin +
+    stable-rank scatter). Without a spec the grid parameters are planned on
+    the host from the concrete points (``choose_grid_spec``) — that is
+    data-dependent host work, so under ``jit``/``vmap`` an explicit spec is
+    required (and is what makes a batch of scenes share one trace).
+    """
+    if spec is None:
+        if isinstance(points, jax.core.Tracer):
+            raise TypeError(
+                "build_index called under jit/vmap without a GridSpec: grid "
+                "planning (choose_grid_spec) is host-side data-dependent "
+                "work. Plan the spec eagerly and pass spec=...")
+        # np.asarray is free for host inputs and one fetch for device
+        # inputs; converting before the upload below avoids a host->device
+        # ->host round-trip of the full cloud
+        spec = choose_grid_spec(np.asarray(points, np.float32),
+                                params.radius)
+    points = jnp.asarray(points, jnp.float32)
+    grid = build_cell_grid(points, spec)
+    statics = megacell_statics(spec.cell_size, params, opts.w_max)
+    return NeighborIndex(params=params, opts=opts, statics=statics,
+                         points=points, grid=grid, anchor_points=points)
+
+
+def update_index(index: NeighborIndex,
+                 new_points) -> tuple[NeighborIndex, UpdateStats]:
+    """Re-bin moved points into the index's frozen spec (pure, traceable).
+
+    Returns the updated index and on-device :class:`UpdateStats` —
+    ``overflow`` / ``oob`` counters (nonzero means the frozen spec can no
+    longer represent the scene exactly; the session's host respec fallback
+    handles that) and ``max_disp2`` vs ``anchor_points`` (the staleness
+    statistic). The anchor is deliberately NOT advanced: re-anchoring is
+    the replan branch's job (``with_anchor``), typically under the
+    session's ``lax.cond``.
+    """
+    pts = jnp.asarray(new_points, jnp.float32)
+    grid, stats, _ccoord = update_cell_grid_traced(
+        index.grid, pts, index.anchor_points,
+        use_pallas=index.opts.use_pallas)
+    return (dataclasses.replace(index, points=pts, grid=grid), stats)
+
+
+# ---------------------------------------------------------------------------
+# plan / execute / query
+# ---------------------------------------------------------------------------
+
+def plan_query(index: NeighborIndex, queries, *,
+               margin: int = 0) -> QueryPlan:
+    """Schedule + partition ``queries`` into a replayable :class:`QueryPlan`
+    (pure, traceable).
+
+    ``margin`` bakes the staleness allowance into every window (the traced
+    counterpart of ``partition.inflate_plan_inputs``): windows inflate by
+    ``margin`` cells clamped to the full-radius window, and the sphere-test
+    skip is revoked for any window pushed past the inscribed ring — so a
+    captured plan stays exact while drift remains under the session
+    threshold.
+    """
+    queries = jnp.asarray(queries, jnp.float32)
+    params, opts, statics = index.params, index.opts, index.statics
+    spec = index.spec
+    nq = queries.shape[0]
+    tile = opts.query_tile
+    partitioned = opts.partition and statics.has_megacells
+    ladder = launch_signatures(statics, params, margin=margin,
+                               enabled=partitioned, w_ladder=opts.w_ladder)
+    ccoord = spec.cell_of(queries)
+    if partitioned:
+        w_search, skip, _rho = compute_megacells(index.grid, queries,
+                                                 statics, params)
+        if margin:
+            w_search = jnp.minimum(w_search + jnp.int32(margin),
+                                   jnp.int32(statics.w_full))
+            skip = skip & (w_search <= statics.w_sph)
+        levels = signature_levels(w_search, skip, ladder)
+    else:
+        levels = jnp.zeros((nq,), jnp.int32)
+    perm = schedule_by_level(ccoord, levels, morton=opts.schedule)
+    npad = (-nq) % tile
+    # edge-replicate padding (same discipline as the executor's padded
+    # selections): padded slots repeat the last scheduled query
+    take = jnp.minimum(jnp.arange(nq + npad), nq - 1)
+    perm_p = perm[take].astype(jnp.int32)
+    tile_levels = jnp.max(levels[perm_p].reshape(-1, tile), axis=1)
+    return QueryPlan(nq=nq, tile=tile, ladder=ladder, perm=perm_p,
+                     tile_levels=tile_levels)
+
+
+def execute_plan(index: NeighborIndex, queries,
+                 plan: QueryPlan) -> SearchResult:
+    """Run ``queries`` through a captured plan (pure, traceable).
+
+    One ``lax.map`` over query tiles; each tile dispatches through
+    ``lax.switch`` to its launch signature's ``window_tile_search`` branch
+    — identical per-tile ops to the executor's launches, so results are
+    exact, and the scatter back through ``perm`` happens on device.
+    """
+    queries = jnp.asarray(queries, jnp.float32)
+    params = index.params
+    k, tile, nq = params.k, plan.tile, plan.nq
+    grid, points, spec = index.grid, index.points, index.spec
+    qs = queries[plan.perm]
+
+    def _branch(w, skip):
+        def run(qt):
+            return window_tile_search(grid, points, qt, spec, w,
+                                      params.radius, k, skip)
+        return run
+
+    branches = [_branch(w, s) for (w, s) in plan.ladder]
+
+    def one_tile(args):
+        qt, lvl = args
+        if len(branches) == 1:
+            return branches[0](qt)
+        return jax.lax.switch(jnp.clip(lvl, 0, len(branches) - 1),
+                              branches, qt)
+
+    d2t, idxt, cntt = jax.lax.map(
+        one_tile, (qs.reshape(-1, tile, 3), plan.tile_levels))
+    # padded slots repeat the last real query, so duplicate writes below
+    # carry identical rows and the scatter is idempotent
+    out_idx = jnp.full((nq, k), -1, jnp.int32).at[plan.perm].set(
+        idxt.reshape(-1, k))
+    out_d2 = jnp.full((nq, k), jnp.inf, jnp.float32).at[plan.perm].set(
+        d2t.reshape(-1, k))
+    out_cnt = jnp.zeros((nq,), jnp.int32).at[plan.perm].set(
+        cntt.reshape(-1))
+    return SearchResult(indices=out_idx, distances2=out_d2, counts=out_cnt)
+
+
+def query(index: NeighborIndex, queries) -> SearchResult:
+    """Pure neighbor search: ``execute_plan(plan_query(...))``.
+
+    Traceable end-to-end — composes under ``jax.jit``, ``jax.vmap`` (stack
+    same-spec scenes and batch both arguments), and ``shard_map``. Results
+    are in query order and exact (knn distances/counts identical to the
+    eager ``NeighborSearch.query``; range mode returns a valid bounded-K
+    in-radius subset per the paper's interface).
+    """
+    return execute_plan(index, queries, plan_query(index, queries))
+
+
+# ---------------------------------------------------------------------------
+# keyed index cache (one-shot surface)
+# ---------------------------------------------------------------------------
+
+_SEARCHER_CACHE: collections.OrderedDict = collections.OrderedDict()
+_SEARCHER_CACHE_MAX = 8
+
+
+def cached_searcher(points, params: SearchParams,
+                    opts: SearchOpts = SearchOpts()):
+    """Keyed cache behind the one-shot ``neighbor_search``.
+
+    The legacy one-shot path constructed a fresh ``NeighborSearch`` +
+    executor per call, discarding every plan/compile cache each time.
+    Here the searcher is cached by a value fingerprint of (points, params,
+    opts), so repeated one-shot calls over the same point set — the
+    benchmark/test pattern — reuse the built grid, partition plans, and
+    compiled launch schedules. LRU-bounded at ``_SEARCHER_CACHE_MAX``;
+    the entries pin their device grids until evicted, so memory-sensitive
+    streaming callers should use :func:`searcher_cache_clear` (or build a
+    ``NeighborSearch`` directly, which was always the uncached path).
+    """
+    from .search import NeighborSearch
+    # np.asarray fetches device arrays and is free on host arrays (the
+    # common one-shot case) — no gratuitous upload/download round-trip
+    pts_np = np.asarray(points, np.float32)
+    digest = hashlib.sha1(np.ascontiguousarray(pts_np).tobytes()).digest()
+    key = (pts_np.shape, digest, params, opts)
+    hit = _SEARCHER_CACHE.get(key)
+    if hit is not None:
+        _SEARCHER_CACHE.move_to_end(key)
+        return hit
+    ns = NeighborSearch(pts_np, params, opts)
+    _SEARCHER_CACHE[key] = ns
+    if len(_SEARCHER_CACHE) > _SEARCHER_CACHE_MAX:
+        _SEARCHER_CACHE.popitem(last=False)
+    return ns
+
+
+def searcher_cache_stats() -> dict:
+    """Size of the one-shot searcher cache (tests assert hit behavior by
+    identity of the returned searcher)."""
+    return {"entries": len(_SEARCHER_CACHE),
+            "max_entries": _SEARCHER_CACHE_MAX}
+
+
+def searcher_cache_clear() -> None:
+    _SEARCHER_CACHE.clear()
+
+
+__all__ = [
+    "GridSpec",
+    "NeighborIndex",
+    "QueryPlan",
+    "SearchOpts",
+    "SearchParams",
+    "SearchResult",
+    "UpdateStats",
+    "build_index",
+    "cached_searcher",
+    "execute_plan",
+    "launch_signatures",
+    "plan_query",
+    "query",
+    "searcher_cache_clear",
+    "searcher_cache_stats",
+    "update_index",
+]

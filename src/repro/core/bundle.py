@@ -59,6 +59,13 @@ class Bundle:
     skip_test: bool
     count: int
 
+    @property
+    def signature(self) -> tuple[int, bool]:
+        """Static launch signature ``(w_search, skip_test)`` — the key the
+        executor folds same-shaped launches by, and the value domain of the
+        functional core's static ladder (``partition.launch_signatures``)."""
+        return (int(self.w_search), bool(self.skip_test))
+
 
 def _mk_bundle(parts: Sequence[Partition], idxs: Sequence[int],
                w_sph: int) -> Bundle:

@@ -1,5 +1,5 @@
 """Dynamic-scene subsystem: persistent sessions over moving points
-(DESIGN.md section 7).
+(DESIGN.md sections 7-8).
 
 RTNN's target applications — SPH fluids, MD, point-cloud registration — are
 *frame-stepped*: points move a little each step. The static pipeline pays
@@ -7,30 +7,33 @@ its whole cost again every frame (host `choose_grid_spec` sync, full grid
 rebuild, cold plan/compile caches); the paper's Fig. 15 makes build time a
 first-class cost for exactly this reason, and follow-on work (RT-kNNS
 Unbound; dynamic fixed-radius RT search) centers keeping the index resident
-across rounds. :class:`SimulationSession` is that steady-state path:
+across rounds. :class:`SimulationSession` is that steady-state path, now a
+thin shim over the functional core (``core/api.py``):
 
 * **frozen spec** — the `GridSpec` is planned ONCE (with domain margin and
   capacity slack so points can drift), so every step's shapes are static
-  and every compiled program stays valid across the whole run;
-* **incremental update** — `grid.update_cell_grid` re-bins the moved
-  points into the existing dense grid in one fused device program under a
-  donated buffer, emitting on-device overflow / out-of-bounds counters and
-  the max-displacement statistic; the only per-step host transfer besides
-  the result sync is the one fused fetch of those scalars;
-* **temporal-coherence plan reuse** — while the max displacement since the
-  last replan stays below ``displacement_frac * cell_size``, the previous
-  Morton schedule permutation and partition plan are replayed verbatim
-  (``QueryExecutor.execute(reuse=...)``): zero host-side replanning, zero
-  recompilation, straight into the cached compiled launch schedule. Reused
-  windows carry a ``reuse_margin_cells`` inflation (the staleness contract,
-  ``partition.inflate_plan_inputs``) so results stay exact under drift;
+  and the one compiled step program stays valid across the whole run;
+* **one fused step program** — ``step()`` dispatches a single jitted
+  program: ``update_index`` (incremental re-bin + on-device counters and
+  the max-displacement statistic) followed by the staleness branch and the
+  search. No host work between update and search;
+* **device-resident staleness** — the replan-vs-replay decision is
+  ``lax.cond(max_disp2 > threshold^2, replan, replay)`` ON DEVICE: the
+  replan branch recomputes the (level, Morton) :class:`~.api.QueryPlan`
+  (with the ``reuse_margin_cells`` inflation baked in, the staleness
+  contract of ``partition.inflate_plan_inputs``) and re-anchors; the
+  replay branch returns the captured plan unchanged. The per-step stats
+  fetch of the previous design is gone — the ONLY per-step host transfer
+  is one packed flags scalar that rides the result materialization
+  (it doubles as the respec guard);
 * **self-query fast path** — ``step(points)`` (the SPH/MD case) never
-  uploads a second array and shares the update's cell assignment with the
-  query schedule (``schedule.schedule_cells``);
-* **respec fallback** — a nonzero overflow or out-of-bounds counter means
-  the frozen grid can no longer represent the scene exactly; the session
-  falls back to the (rare) host-side respec-and-rebuild: fresh spec, fresh
-  grid, invalidated executor caches (``QueryExecutor.invalidate``).
+  uploads a second array; points and queries are the same device buffer
+  through the whole fused program;
+* **respec fallback** — a nonzero overflow / out-of-bounds counter (bit 1
+  of the flags scalar) means the frozen grid can no longer represent the
+  scene exactly; the session falls back to the (rare) host-side
+  respec-and-rebuild — fresh spec, fresh ``NeighborIndex``, forced replan
+  — and re-executes the step so results stay exact across the respec.
 """
 from __future__ import annotations
 
@@ -43,9 +46,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .grid import build_cell_grid, choose_grid_spec, update_cell_grid
-from .partition import megacell_statics
-from .search import NeighborSearch
+from . import api
+from .grid import choose_grid_spec
 from .types import (Array, GridSpec, SearchOpts, SearchParams, SearchResult)
 
 
@@ -90,15 +92,21 @@ class SessionOpts:
 
 @dataclasses.dataclass
 class StepReport:
-    """Per-step breakdown (the session analogue of ``SearchReport``)."""
+    """Per-step breakdown (the session analogue of ``SearchReport``).
 
-    t_update: float = 0.0      # grid update dispatch + fused stats fetch
-    t_plan: float = 0.0        # replan (0.0 on fast steps)
-    t_search: float = 0.0      # executor dispatch + result sync
-    fast: bool = False         # replayed the cached plan
+    The staleness statistic now lives on device (``max_disp`` is only
+    populated on the rare respec/raise path, where the full stats are
+    fetched); ``t_update``/``t_plan`` are 0.0 because update, plan, and
+    search are one fused program timed as ``t_search``.
+    """
+
+    t_update: float = 0.0      # merged into t_search (fused step program)
+    t_plan: float = 0.0        # merged into t_search (fused step program)
+    t_search: float = 0.0      # fused step dispatch + flags/result sync
+    fast: bool = False         # replayed the captured plan (device decision)
     replanned: bool = False
     respecced: bool = False
-    max_disp: float = 0.0      # max displacement since plan anchor
+    max_disp: float = 0.0      # fetched only on the respec/raise path
     overflow: int = 0
     oob: int = 0
 
@@ -116,6 +124,66 @@ def session_grid_spec(points: np.ndarray, radius: float,
     )
 
 
+# ---------------------------------------------------------------------------
+# the fused step program
+# ---------------------------------------------------------------------------
+
+# flags bitmask returned by the fused step (ONE packed scalar is the only
+# per-step host transfer; fetching it doubles as the result sync)
+_FLAG_REPLANNED = 1     # staleness cond took the replan branch
+_FLAG_EXHAUSTED = 2     # overflow/oob: frozen spec can no longer bin exactly
+
+
+def _step_impl(index: api.NeighborIndex, plan, pts: Array, q: Array,
+               anchor_q: Array, *, thr2: float, margin: int, force: bool,
+               self_query: bool):
+    """update_index -> lax.cond(stale, replan, replay) -> execute_plan.
+
+    Everything device-resident: the staleness statistic (max displacement
+    vs the plan anchor, plus query drift in external-query mode) is
+    compared against the threshold on device, and both the fresh and the
+    replayed :class:`~.api.QueryPlan` flow into the same compiled search.
+    ``force`` (static) is the plan-capture variant: first step, shape or
+    query-set changes, and the post-respec re-execution.
+    """
+    index2, stats = api.update_index(index, pts)
+    bad = (stats.overflow > 0) | (stats.oob > 0)
+    disp2 = stats.max_disp2
+    if not self_query:
+        disp2 = jnp.maximum(
+            disp2, jnp.max(jnp.sum((q - anchor_q) ** 2, axis=-1)))
+
+    if force:
+        stale = jnp.bool_(True)
+        plan2 = api.plan_query(index2, q, margin=margin)
+        anchor2, anchor_q2 = pts, q
+    else:
+        stale = disp2 > jnp.float32(thr2)
+
+        def replan(_):
+            return api.plan_query(index2, q, margin=margin), pts, q
+
+        def replay(_):
+            return plan, index2.anchor_points, anchor_q
+
+        plan2, anchor2, anchor_q2 = jax.lax.cond(stale, replan, replay, None)
+
+    index3 = index2.with_anchor(anchor2)
+    res = api.execute_plan(index3, q, plan2)
+    flags = (stale.astype(jnp.int32) * _FLAG_REPLANNED
+             + bad.astype(jnp.int32) * _FLAG_EXHAUSTED)
+    return index3, plan2, anchor_q2, res, flags, stats
+
+
+# NOTE: the step deliberately does NOT donate the index argument. Its
+# points/anchor_points leaves can alias caller-owned arrays (build_index
+# keeps the caller's device buffer), and after a replan both leaves can be
+# the SAME buffer — donation would invalidate caller arrays off-CPU and
+# trip duplicate-donation. Re-introducing grid-only donation needs
+# alias-safe plumbing (ROADMAP).
+_STEP_STATICS = ("thr2", "margin", "force", "self_query")
+
+
 class SimulationSession:
     """Persistent neighbor search over a frame-stepped scene.
 
@@ -128,7 +196,8 @@ class SimulationSession:
     return a ``SearchResult`` in query order, exact w.r.t. the *current*
     positions (oracle-identical to a fresh ``NeighborSearch``), including
     across respecs. ``stats()`` exposes the lifecycle counters the tests
-    assert on (steps / fast_steps / replans / respecs / stats_fetches).
+    assert on (steps / fast_steps / replans / respecs / stats_fetches —
+    the latter stays 0 on every non-respec step).
     """
 
     def __init__(
@@ -139,9 +208,6 @@ class SimulationSession:
         sopts: SessionOpts = SessionOpts(),
         spec: GridSpec | None = None,
     ):
-        if not opts.executor:
-            raise ValueError("SimulationSession requires the executor path "
-                             "(SearchOpts.executor=True)")
         # the staleness contract (inflate_plan_inputs): each of the query
         # and its candidates may shift ceil(frac) cells before a replan, so
         # the baked-in window margin must cover both or reuse loses
@@ -156,13 +222,15 @@ class SimulationSession:
                 f"{sopts.displacement_frac} (needs >= {need})")
         self.sopts = sopts
         pts = jnp.asarray(points, jnp.float32)
-        pts_np = np.asarray(jax.device_get(pts))
-        spec = spec or session_grid_spec(pts_np, params.radius, sopts)
-        self._ns = NeighborSearch(pts_np, params, opts, spec=spec)
-        self._ns.points = pts            # keep the caller's device buffer
-        self._handle = None              # captured PlanHandle (plan anchor)
-        self._anchor_points = pts        # positions at the last replan
-        self._anchor_queries = None      # external-query anchor (if any)
+        spec = spec or session_grid_spec(
+            np.asarray(jax.device_get(pts)), params.radius, sopts)
+        self._index = api.build_index(pts, params, opts, spec=spec)
+        self._plan: api.QueryPlan | None = None
+        self._anchor_queries: Array | None = None
+        # per-session jit so a respec can release the step variants
+        # compiled against the old spec (and session teardown frees them
+        # all) instead of pinning them in a module-global cache forever
+        self._step_fn = jax.jit(_step_impl, static_argnames=_STEP_STATICS)
         self._counters = collections.Counter()
         self.report = StepReport()
 
@@ -170,16 +238,16 @@ class SimulationSession:
 
     @property
     def spec(self) -> GridSpec:
-        return self._ns.spec
+        return self._index.spec
 
     @property
     def params(self) -> SearchParams:
-        return self._ns.params
+        return self._index.params
 
     @property
-    def search(self) -> NeighborSearch:
-        """The underlying (session-managed) static search object."""
-        return self._ns
+    def index(self) -> api.NeighborIndex:
+        """The session-managed functional index (``core/api.py``)."""
+        return self._index
 
     def stats(self) -> dict:
         counters = dict(steps=0, fast_steps=0, replans=0, respecs=0,
@@ -188,115 +256,101 @@ class SimulationSession:
         return {
             **counters,
             "last": dataclasses.asdict(self.report),
-            "executor": self._ns.executor.stats(),
+            "step_cache_size": int(self._step_fn._cache_size()),
         }
 
     # -- lifecycle ----------------------------------------------------------
 
-    def _respec(self, pts: Array) -> None:
-        """Rare host-side fallback: the frozen grid overflowed or points
-        escaped it. Replan the spec from current positions, rebuild, and
-        invalidate every plan/compile cache keyed on the old geometry."""
-        ns = self._ns
-        pts_np = np.asarray(jax.device_get(pts))
-        spec = session_grid_spec(pts_np, ns.params.radius, self.sopts)
-        ns.spec = spec
-        ns.points = pts
-        ns.grid = build_cell_grid(pts, spec)
-        ns.statics = megacell_statics(spec.cell_size, ns.params,
-                                      ns.opts.w_max)
-        ns.executor.invalidate()
-        self._handle = None
-        self._counters["respecs"] += 1
-
-    def _replan(self, queries: Array, qcells_dev: Array | None,
-                pts: Array, self_query: bool) -> None:
-        """Capture a fresh schedule+partition+bundle plan anchored at the
-        current positions (host work; amortized across the following fast
-        steps)."""
-        self._handle = self._ns.executor.capture_plan(
-            queries, qcells_dev=qcells_dev,
-            margin=self.sopts.reuse_margin_cells)
-        self._anchor_points = pts
-        self._anchor_queries = None if self_query else queries
-        self._counters["replans"] += 1
+    def _dispatch(self, index, pts, q, anchor_q, force, self_query):
+        thr2 = float((self.sopts.displacement_frac *
+                      index.spec.cell_size) ** 2)
+        return self._step_fn(
+            index, None if force else self._plan, pts, q, anchor_q,
+            thr2=thr2, margin=int(self.sopts.reuse_margin_cells),
+            force=bool(force), self_query=bool(self_query))
 
     def step(self, points, queries=None) -> SearchResult:
         """Advance the session to ``points`` and search.
 
         ``queries=None`` (or ``queries is points``) is the self-query fast
-        path: every particle queries its own neighborhood, the device
-        upload and the cell assignment are shared between build and
-        schedule. Results are in query order, exact for the current
-        positions.
+        path: every particle queries its own neighborhood over the shared
+        device buffer. Results are in query order, exact for the current
+        positions. One fused device program per step; one packed flags
+        scalar is the only host transfer (it materializes the results).
         """
         rep = StepReport()
         t0 = time.perf_counter()
-        ns = self._ns
         pts = jnp.asarray(points, jnp.float32)
         self_query = queries is None or queries is points
         q = pts if self_query else jnp.asarray(queries, jnp.float32)
 
-        # incremental update: one fused device program; anchor of the
-        # displacement statistic is the plan capture, not the last frame
-        anchor = (self._anchor_points
-                  if pts.shape == self._anchor_points.shape else pts)
-        grid, stats, ccoord = update_cell_grid(
-            ns.grid, pts, anchor, use_pallas=ns.opts.use_pallas)
+        index = self._index
+        if pts.shape != index.points.shape:
+            # particle count changed under the frozen spec: re-seat the
+            # leaves; the displacement statistic restarts from here
+            index = dataclasses.replace(index, points=pts, anchor_points=pts)
+            self._plan = None
 
-        fetch = [stats.overflow, stats.oob, stats.max_disp2]
-        if (not self_query and self._anchor_queries is not None
-                and q.shape == self._anchor_queries.shape):
-            fetch.append(jnp.max(jnp.sum(
-                (q - self._anchor_queries) ** 2, axis=-1)))
-        fetched = [np.asarray(a) for a in jax.device_get(tuple(fetch))]
-        self._counters["stats_fetches"] += 1
-        overflow, oob, max_d2 = (int(fetched[0]), int(fetched[1]),
-                                 float(fetched[2]))
-        if len(fetched) > 3:
-            max_d2 = max(max_d2, float(fetched[3]))
-        rep.overflow, rep.oob = overflow, oob
-        rep.max_disp = math.sqrt(max(max_d2, 0.0))
+        anchor_q = self._anchor_queries
+        # switching between self-query and external queries always replans:
+        # the captured plan is anchored at the other set's positions, which
+        # the displacement statistic does not track
+        force = (self._plan is None
+                 or self._plan.nq != q.shape[0]
+                 or self_query != (anchor_q is None))
+        if self_query:
+            anchor_q = q
+        elif anchor_q is None or anchor_q.shape != q.shape:
+            anchor_q = q
+            force = True
 
-        if overflow > 0 or oob > 0:
+        out = self._dispatch(index, pts, q, anchor_q, force, self_query)
+        index3, plan2, anchor_q2, res, flags, stats = out
+        fl = int(flags)      # THE per-step transfer: syncs the fused step
+
+        if fl & _FLAG_EXHAUSTED:
+            # rare path: fetch the full stats for the report/raise, then
+            # respec-and-rebuild on the host and re-execute for exactness
+            overflow, oob = int(stats.overflow), int(stats.oob)
+            self._counters["stats_fetches"] += 1
+            rep.overflow, rep.oob = overflow, oob
+            rep.max_disp = math.sqrt(max(float(stats.max_disp2), 0.0))
             if not self.sopts.auto_respec:
-                # the old grid's buffers were donated to the update; keep
-                # the session consistent (same spec) before raising
-                ns.points = pts
-                ns.grid = grid
+                # keep the session consistent (updated grid, dropped plan)
+                # before raising
+                self._index = index3
+                self._plan = None
+                self._anchor_queries = None if self_query else anchor_q2
                 raise RuntimeError(
                     f"frozen grid exhausted (overflow={overflow}, "
                     f"out_of_bounds={oob}) and auto_respec is disabled")
-            self._respec(pts)
+            spec = session_grid_spec(
+                np.asarray(jax.device_get(pts)), index.params.radius,
+                self.sopts)
+            index = api.build_index(pts, index.params, index.opts, spec=spec)
+            # release every step variant compiled against the old spec
+            # (the new-spec trace replaces them; the analogue of the
+            # executor path's invalidate())
+            self._step_fn.clear_cache()
+            self._counters["respecs"] += 1
             rep.respecced = True
-            ccoord = None                # old-spec cells are meaningless
-        else:
-            ns.points = pts
-            ns.grid = grid
-        rep.t_update = time.perf_counter() - t0
+            out = self._dispatch(index, pts, q, anchor_q, True, self_query)
+            index3, plan2, anchor_q2, res, flags, stats = out
+            fl = int(flags)
+            if fl & _FLAG_EXHAUSTED:        # pragma: no cover
+                raise RuntimeError(
+                    f"respec failed to absorb the scene (overflow="
+                    f"{int(stats.overflow)}, oob={int(stats.oob)})")
 
-        threshold = self.sopts.displacement_frac * ns.spec.cell_size
-        stale = (
-            self._handle is None
-            or self._handle.nq != q.shape[0]
-            or pts.shape != self._anchor_points.shape
-            # switching between self-query and external queries always
-            # replans: the captured plan is anchored at the other set's
-            # positions, which the displacement statistic does not track
-            or self_query != (self._anchor_queries is None)
-            or rep.max_disp > threshold
-        )
-        if stale:
-            t0 = time.perf_counter()
-            self._replan(q, ccoord if self_query else None, pts, self_query)
-            rep.t_plan = time.perf_counter() - t0
+        self._index = index3
+        self._plan = plan2
+        self._anchor_queries = None if self_query else anchor_q2
+        if fl & _FLAG_REPLANNED:
             rep.replanned = True
+            self._counters["replans"] += 1
         else:
             rep.fast = True
             self._counters["fast_steps"] += 1
-
-        t0 = time.perf_counter()
-        res = ns.executor.execute(q, reuse=self._handle)
         rep.t_search = time.perf_counter() - t0
         self._counters["steps"] += 1
         self.report = rep

@@ -224,7 +224,7 @@ class QueryExecutor:
         by_sig: dict = {}
         order: list = []
         for b in bundles:
-            sig = (int(b.w_search), bool(b.skip_test))
+            sig = b.signature
             if sig not in by_sig:
                 by_sig[sig] = []
                 order.append(sig)

@@ -190,6 +190,21 @@ def update_cell_grid(
     return fn(grid, points, anchor_points, use_pallas=use_pallas)
 
 
+def update_cell_grid_traced(
+    grid: CellGrid,
+    points: Array,
+    anchor_points: Array,
+    *,
+    use_pallas: bool = False,
+) -> tuple[CellGrid, UpdateStats, Array]:
+    """Un-jitted core of :func:`update_cell_grid`, for composition inside
+    larger traced programs: the functional core's ``update_index``
+    (``core/api.py``) and the session's fused ``lax.cond`` step
+    (``core/dynamic.py``) inline it into their own jitted bodies, where a
+    nested donating jit would be meaningless."""
+    return _update_impl(grid, points, anchor_points, use_pallas)
+
+
 def _summed_area_table(counts: Array) -> Array:
     """3-D inclusive summed-area table with a zero border at index 0."""
     s = jnp.cumsum(jnp.cumsum(jnp.cumsum(counts, 0), 1), 2)

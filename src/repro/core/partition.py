@@ -24,7 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from functools import partial
+from functools import lru_cache, partial
 
 import jax
 import jax.numpy as jnp
@@ -193,6 +193,95 @@ def inflate_plan_inputs(
                    int(w_full)).astype(w_search.dtype)
     s = skip.astype(bool) & (w <= w_sph)
     return w, s
+
+
+def launch_signatures(
+    statics: MegacellStatics,
+    params: SearchParams,
+    *,
+    margin: int = 0,
+    enabled: bool = True,
+    w_ladder: tuple[int, ...] | None = None,
+) -> tuple[tuple[int, bool], ...]:
+    """Static launch-signature ladder of the traced query path.
+
+    The host-planned executor groups bundles by their data-dependent
+    ``(w_search, skip_test)`` signature; a traced query cannot (shapes must
+    be static), so the functional core (``core/api.py``) instead enumerates
+    every signature a query can possibly be assigned — the megacell rings
+    ``0..w_loop`` mapped through the paper's window sizing, plus the
+    full-radius fallback — entirely from host-static quantities, and
+    dispatches each query tile to its ladder entry with ``lax.switch``.
+
+    ``margin`` bakes the staleness inflation of ``inflate_plan_inputs``
+    into the ladder (captured plans for the dynamic session). ``w_ladder``
+    (``SearchOpts.w_ladder``) overrides the derived window set with an
+    explicit one; queries then round UP to the nearest ladder window and
+    the sphere-test skip is disabled (a coarser-but-always-exact ladder
+    that bounds the ``lax.switch`` branch count).
+    """
+    return _launch_signatures_cached(statics, params, margin, enabled,
+                                     w_ladder)
+
+
+@lru_cache(maxsize=256)
+def _launch_signatures_cached(statics, params, margin, enabled, w_ladder):
+    # partitioning inactive -> every query needs the full-radius window;
+    # a coarser explicit ladder has no per-query levels to dispatch on and
+    # must not shadow this (plan_query assigns level 0 to everything)
+    if not enabled or not statics.has_megacells:
+        return ((statics.w_full, False),)
+    if w_ladder is not None:
+        ws = sorted({int(w) for w in w_ladder if 0 <= int(w)}
+                    | {statics.w_full})
+        return tuple((w, False) for w in ws if w <= statics.w_full)
+    pairs = {(statics.w_full, False)}        # not-found / fallback signature
+    # evaluate the traced ring->window map eagerly on every concrete ring so
+    # the ladder windows are bit-identical to compute_megacells' values
+    # (compile-time eval: launch_signatures is also reached from inside
+    # jitted programs, where plain jnp ops would return tracers)
+    with jax.ensure_compile_time_eval():
+        rings = jnp.arange(statics.w_loop + 1, dtype=jnp.int32)
+        w_r, s_r = _window_from_ring(rings, jnp.ones_like(rings, bool),
+                                     statics, params)
+        w_list = np.asarray(w_r).tolist()
+        s_list = np.asarray(s_r).tolist()
+    for w, s in zip(w_list, s_list):
+        w2 = min(int(w) + margin, statics.w_full)
+        pairs.add((w2, bool(s) and w2 <= statics.w_sph))
+    return tuple(sorted(pairs))
+
+
+def signature_levels(
+    w_search: Array,
+    skip: Array,
+    ladder: tuple[tuple[int, bool], ...],
+) -> Array:
+    """Per-query index into ``ladder`` (traced).
+
+    With a derived ladder every ``(w_search, skip)`` pair matches one entry
+    exactly by construction; with an explicit ``SearchOpts.w_ladder`` the
+    query rounds up to the smallest ladder window >= ``w_search`` (skips
+    are revoked by construction there, so matching on ``w`` suffices).
+    """
+    exact = jnp.zeros(w_search.shape, jnp.int32)
+    matched = jnp.zeros(w_search.shape, bool)
+    for i, (wl, sl) in enumerate(ladder):
+        hit = (w_search == wl) & (skip == sl)
+        exact = jnp.where(hit, jnp.int32(i), exact)
+        matched = matched | hit
+    if any(s for _, s in ladder):
+        # derived ladder: every pair matches by construction; the defensive
+        # fallback must never land on a skip entry (eliding the r^2 filter
+        # is only sound for the exact megacell signature)
+        fb = max(i for i, (_, s) in enumerate(ladder) if not s)
+        fallback = jnp.full(w_search.shape, fb, jnp.int32)
+    else:
+        ws = jnp.asarray([w for w, _ in ladder], jnp.int32)
+        fallback = jnp.clip(
+            jnp.searchsorted(ws, w_search.astype(jnp.int32), side="left"),
+            0, len(ladder) - 1).astype(jnp.int32)
+    return jnp.where(matched, exact, fallback)
 
 
 def plan_partitions(

@@ -49,6 +49,26 @@ def schedule_cells(ccoord: Array) -> tuple[Array, Array]:
     return perm, inv
 
 
+def schedule_by_level(ccoord: Array, levels: Array,
+                      morton: bool = True) -> Array:
+    """Traced ``(level, Morton)`` lexicographic ordering.
+
+    The functional core's counterpart of ``plan_partitions``' stable host
+    sort: queries are Morton-scheduled first, then stably sorted by their
+    launch-signature level, so every launch group is a contiguous run of
+    scheduled slots AND keeps the Morton coherence order within itself —
+    identical layout discipline to the executor's signature-batched groups,
+    derived entirely on device. ``morton=False`` mirrors
+    ``SearchOpts(schedule=False)`` (input order within each level).
+    """
+    n = ccoord.shape[0]
+    if morton:
+        perm0 = jnp.argsort(morton_encode(ccoord)).astype(jnp.int32)
+    else:
+        perm0 = jnp.arange(n, dtype=jnp.int32)
+    return perm0[jnp.argsort(levels[perm0], stable=True)]
+
+
 def coherence_statistic(spec: GridSpec, queries: Array) -> Array:
     """Fraction of adjacent query pairs sharing a grid cell — the proxy we
     report for the paper's Fig. 6 cache/occupancy microarchitecture numbers

@@ -29,7 +29,6 @@ import numpy as np
 _SELECTION = os.environ.get("REPRO_SELECTION", "topk")
 
 from . import bundle as bundle_mod
-from .grid import build_cell_grid, choose_grid_spec
 from .partition import (MegacellStatics, PartitionPlan, compute_megacells,
                         megacell_statics, plan_partitions, trivial_plan)
 from .schedule import schedule_queries
@@ -41,6 +40,72 @@ from ..kernels.ref import pairwise_d2, topk_select
 # ---------------------------------------------------------------------------
 # per-bundle window search (jnp path; the Pallas path lives in kernels/ops)
 # ---------------------------------------------------------------------------
+
+def window_tile_search(
+    grid: CellGrid,
+    points: Array,
+    qt: Array,
+    spec: GridSpec,
+    w: int,
+    radius: float,
+    k: int,
+    skip_test: bool,
+    origin: Array | None = None,
+) -> tuple[Array, Array, Array]:
+    """One query tile ``qt`` [T, 3] against the (2w+1)^3 window around each
+    query's cell: ([T, k] d2, [T, k] idx, [T] cnt).
+
+    The per-tile unit shared by the jitted ``window_search`` path and the
+    traced launch-ladder branches of the functional core (``core/api.py``):
+    both paths run the identical ops, so their results are bit-identical
+    for the same ``w``/``skip_test`` signature.
+
+    Step 1 (paper: ray-AABB on RT cores) is the regular window gather —
+    pure index arithmetic. Step 2 (paper: IS shader sphere test) is the
+    tiled pairwise-distance + bounded-K selection; with ``skip_test`` the
+    r^2 filter is elided (paper's megacell-inscribed range-search case).
+    """
+    # per-axis window, clamped to the grid (thin-slab datasets like KITTI
+    # have near-degenerate axes whose whole extent fits inside the window)
+    ws = tuple(min(2 * w + 1, d) for d in spec.dims)
+    cap = spec.capacity
+    r2 = jnp.float32(radius) ** 2
+    dims = jnp.asarray(spec.dims, jnp.int32)
+    ws_arr = jnp.asarray(ws, jnp.int32)
+
+    ccoord = spec.cell_of(qt, origin)                    # [T, 3]
+    start = jnp.clip(ccoord - w, 0, dims - ws_arr)       # [T, 3]
+
+    def gather_one(st):
+        blk = jax.lax.dynamic_slice(
+            grid.dense, (st[0], st[1], st[2], 0),
+            (*ws, cap))
+        return blk.reshape(-1)
+
+    cand = jax.vmap(gather_one)(start)                   # [T, W^3*C]
+    cand_pos = points[jnp.clip(cand, 0, points.shape[0] - 1)]
+    d2 = _tile_d2(qt, cand_pos)                          # [T, W^3*C]
+    invalid = cand < 0
+    if not skip_test:
+        invalid = invalid | (d2 > r2)
+    d2 = jnp.where(invalid, jnp.inf, d2)
+    idx = jnp.where(invalid, -1, cand)
+    if _SELECTION == "topk":
+        # partial selection O(M*K) instead of full argsort O(M log M)
+        # over the candidate axis (Perf iteration 5, EXPERIMENTS.md)
+        m = d2.shape[-1]
+        kk = min(k, m)
+        negd, sel = jax.lax.top_k(-d2, kk)
+        d2k = jnp.pad(-negd, ((0, 0), (0, k - kk)),
+                      constant_values=jnp.inf)
+        idxk = jnp.pad(jnp.take_along_axis(idx, sel, axis=-1),
+                       ((0, 0), (0, k - kk)), constant_values=-1)
+        idxk = jnp.where(jnp.isinf(d2k), -1, idxk)
+    else:
+        d2k, idxk = topk_select(d2, idx, k)
+    cnt = jnp.sum((idxk >= 0).astype(jnp.int32), axis=-1)
+    return d2k, idxk, cnt
+
 
 @partial(jax.jit,
          static_argnames=("spec", "w", "k", "skip_test", "tile"))
@@ -58,57 +123,22 @@ def window_search(
 ) -> tuple[Array, Array, Array]:
     """Search each query against the (2w+1)^3 cell window around its cell.
 
-    Step 1 (paper: ray-AABB on RT cores) is the regular window gather —
-    pure index arithmetic. Step 2 (paper: IS shader sphere test) is the
-    tiled pairwise-distance + bounded-K selection; with ``skip_test`` the
-    r^2 filter is elided (paper's megacell-inscribed range-search case).
+    Tiled driver over :func:`window_tile_search`. Padded rows are
+    edge-replicates of the last real query (matching the host loop and the
+    Pallas path) so they search that query's own window instead of all
+    collapsing into the origin cell's window — zero-padding wasted gathers
+    and distorted the Pallas tile-window anchors.
     """
     nq = queries.shape[0]
     npad = (-nq) % tile
-    qp = jnp.pad(queries, ((0, npad), (0, 0)))
-    # per-axis window, clamped to the grid (thin-slab datasets like KITTI
-    # have near-degenerate axes whose whole extent fits inside the window)
-    ws = tuple(min(2 * w + 1, d) for d in spec.dims)
-    cap = spec.capacity
-    r2 = jnp.float32(radius) ** 2
-    dims = jnp.asarray(spec.dims, jnp.int32)
-    ws_arr = jnp.asarray(ws, jnp.int32)
+    if npad:
+        queries = jnp.pad(queries, ((0, npad), (0, 0)), mode="edge")
 
     def one_tile(qt):
-        ccoord = spec.cell_of(qt, origin)                    # [T, 3]
-        start = jnp.clip(ccoord - w, 0, dims - ws_arr)       # [T, 3]
+        return window_tile_search(grid, points, qt, spec, w, radius, k,
+                                  skip_test, origin)
 
-        def gather_one(st):
-            blk = jax.lax.dynamic_slice(
-                grid.dense, (st[0], st[1], st[2], 0),
-                (*ws, cap))
-            return blk.reshape(-1)
-
-        cand = jax.vmap(gather_one)(start)                   # [T, W^3*C]
-        cand_pos = points[jnp.clip(cand, 0, points.shape[0] - 1)]
-        d2 = _tile_d2(qt, cand_pos)                          # [T, W^3*C]
-        invalid = cand < 0
-        if not skip_test:
-            invalid = invalid | (d2 > r2)
-        d2 = jnp.where(invalid, jnp.inf, d2)
-        idx = jnp.where(invalid, -1, cand)
-        if _SELECTION == "topk":
-            # partial selection O(M*K) instead of full argsort O(M log M)
-            # over the candidate axis (Perf iteration 5, EXPERIMENTS.md)
-            m = d2.shape[-1]
-            kk = min(k, m)
-            negd, sel = jax.lax.top_k(-d2, kk)
-            d2k = jnp.pad(-negd, ((0, 0), (0, k - kk)),
-                          constant_values=jnp.inf)
-            idxk = jnp.pad(jnp.take_along_axis(idx, sel, axis=-1),
-                           ((0, 0), (0, k - kk)), constant_values=-1)
-            idxk = jnp.where(jnp.isinf(d2k), -1, idxk)
-        else:
-            d2k, idxk = topk_select(d2, idx, k)
-        cnt = jnp.sum((idxk >= 0).astype(jnp.int32), axis=-1)
-        return d2k, idxk, cnt
-
-    d2c, idxc, cntc = jax.lax.map(one_tile, qp.reshape(-1, tile, 3))
+    d2c, idxc, cntc = jax.lax.map(one_tile, queries.reshape(-1, tile, 3))
     return (idxc.reshape(-1, k)[:nq], d2c.reshape(-1, k)[:nq],
             cntc.reshape(-1)[:nq])
 
@@ -162,15 +192,18 @@ class NeighborSearch:
         spec: GridSpec | None = None,
         cost_model: bundle_mod.CostModel | None = None,
     ):
+        from .api import build_index
         self.params = params
         self.opts = opts
         self.cost_model = cost_model or bundle_mod.CostModel()
-        pts_np = np.asarray(points, np.float32)
-        self.spec = spec or choose_grid_spec(pts_np, params.radius)
-        self.points = jnp.asarray(pts_np)
-        self.grid = build_cell_grid(self.points, self.spec)
-        self.statics = megacell_statics(self.spec.cell_size, params,
-                                        opts.w_max)
+        # thin shim over the functional core: the structure is a
+        # NeighborIndex (core/api.py); the executor below is the
+        # host-planned optimizing path over the same leaves
+        self.index = build_index(points, params, opts, spec=spec)
+        self.spec = self.index.spec
+        self.points = self.index.points
+        self.grid = self.index.grid
+        self.statics = self.index.statics
         self.report = SearchReport()
         from .executor import QueryExecutor
         self.executor = QueryExecutor(self)
@@ -276,7 +309,14 @@ def neighbor_search(points, queries, radius: float, k: int,
                     mode: str = "knn",
                     opts: SearchOpts = SearchOpts(),
                     knn_window: str = "exact") -> SearchResult:
-    """One-shot functional API (builds the structure and searches)."""
+    """One-shot search (builds the structure and searches).
+
+    Routed through the keyed index cache of the functional core
+    (``api.cached_searcher``): repeated one-shot calls over the same point
+    set reuse the built grid and every plan/compile cache instead of
+    discarding them per call.
+    """
+    from .api import cached_searcher
     params = SearchParams(radius=radius, k=k, mode=mode,
                           knn_window=knn_window)
-    return NeighborSearch(points, params, opts).query(queries)
+    return cached_searcher(points, params, opts).query(queries)

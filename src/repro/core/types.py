@@ -157,3 +157,11 @@ class SearchOpts:
     executor: bool = True              # device-resident QueryExecutor path
     #                                    (False: legacy per-bundle host loop,
     #                                    kept for A/B benchmarking)
+    w_ladder: tuple[int, ...] | None = None
+    #                                    explicit window ladder for the traced
+    #                                    functional path (core/api.py): queries
+    #                                    round UP to the nearest ladder window
+    #                                    (always exact, sphere test always on);
+    #                                    None derives the ladder from the
+    #                                    megacell statics. Bounds the traced
+    #                                    lax.switch branch count.

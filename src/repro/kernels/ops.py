@@ -40,7 +40,7 @@ INTERPRET = os.environ.get("PALLAS_INTERPRET", "1") != "0"
 def window_search_pallas(
     grid,                 # core.types.CellGrid
     points: jax.Array,
-    queries: jax.Array,   # [Nq, 3], Nq % tile == 0 (caller pads)
+    queries: jax.Array,   # [Nq, 3]
     spec,                 # core.types.GridSpec
     w: int,
     radius: float,
@@ -50,8 +50,17 @@ def window_search_pallas(
     qcells: np.ndarray | None = None,   # [Nq, 3] host cell coords (optional)
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     nq = queries.shape[0]
-    assert nq % tile == 0
-    n_tiles = nq // tile
+    npad = (-nq) % tile
+    if npad:
+        # edge-replicate to the tile multiple (same padding discipline as
+        # window_search and the executor's selections): padded rows repeat
+        # the last real query, so they cannot distort the shared tile-window
+        # anchors below the way zero rows (origin cell) would
+        queries = jnp.pad(queries, ((0, npad), (0, 0)), mode="edge")
+        if qcells is not None:
+            qcells = np.pad(np.asarray(qcells), ((0, npad), (0, 0)),
+                            mode="edge")
+    n_tiles = (nq + npad) // tile
     dims = np.asarray(spec.dims)
     cap = spec.capacity
 
@@ -75,7 +84,7 @@ def window_search_pallas(
         queries, points, wnd_idx, k=k, r2=float(radius) ** 2,
         skip_test=False, tq=tile, interpret=INTERPRET)
     counts = jnp.sum((idx >= 0).astype(jnp.int32), axis=1)
-    return idx, d2, counts
+    return idx[:nq], d2[:nq], counts[:nq]
 
 
 __all__ = ["bin_disp_tile", "distance_tile", "knn_tile", "range_count",

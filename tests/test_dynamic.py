@@ -1,14 +1,14 @@
-"""SimulationSession contract tests (DESIGN.md section 7): per-step
+"""SimulationSession contract tests (DESIGN.md sections 7-8): per-step
 exactness against a fresh-search oracle on moving points (including across
-respecs), the zero-host-replanning steady state, executor cache behavior
-across incremental updates, and the update kernel itself."""
+respecs), the device-resident staleness steady state (zero host
+replanning, zero per-step stats fetches, zero retraces), and the update
+kernel itself."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (NeighborSearch, SearchOpts, SearchParams,
-                        SessionOpts, SimulationSession, update_cell_grid)
-from repro.core.search import window_search
+from repro.core import (SearchOpts, SearchParams, SessionOpts,
+                        SimulationSession, update_cell_grid)
 from repro.kernels.ref import brute_force_search
 
 
@@ -75,28 +75,26 @@ def test_session_external_queries_exact(rng):
 
 def test_session_steady_state_zero_host_replanning(rng):
     """THE acceptance property: below-threshold steps perform no host-side
-    replanning — no schedule/partition recompute (plan replayed, zero plan
-    fetches), no recompilation (executor counter AND the underlying jit
-    cache), and re-enter the cached compiled launch schedule."""
+    work at all — the staleness decision is a device `lax.cond` (plan
+    replayed on device), the per-step stats fetch is gone (stats_fetches
+    stays 0), and the fused step program is not retraced."""
     pts = rng.random((1500, 3)).astype(np.float32)
     sess = SimulationSession(pts, SearchParams(radius=0.1, k=8))
-    sess.step(pts)                              # capture + compile
-    launchers = sess.search.executor.stats()["launcher_cache_entries"]
+    sess.step(pts)                              # capture + compile (force)
+    pts = _drift(rng, pts, 0.0004)
+    sess.step(pts)                              # compiles the replay variant
+    cache = sess.stats()["step_cache_size"]
     for _ in range(4):
         pts = _drift(rng, pts, 0.0004)          # well below threshold
-        jit_before = window_search._cache_size()
         sess.step(pts)
-        ex = sess.search.executor.stats()
         assert sess.report.fast
         assert not sess.report.replanned and not sess.report.respecced
-        assert ex["last"]["plan_reused"]
-        assert ex["last"]["plan_fetches"] == 0
-        assert ex["last"]["compilations"] == 0
-        assert ex["last"]["host_syncs"] == 1
-        assert window_search._cache_size() == jit_before
-        assert ex["launcher_cache_entries"] == launchers
+        # no retrace: the lax.cond replay re-enters the same compiled step
+        assert sess.stats()["step_cache_size"] == cache
     st = sess.stats()
-    assert st["fast_steps"] == 4 and st["replans"] == 1
+    assert st["fast_steps"] == 5 and st["replans"] == 1
+    # the per-step stats fetch is gone from the fast path entirely
+    assert st["stats_fetches"] == 0
 
 
 def test_session_replans_when_displacement_exceeds_threshold(rng):
@@ -155,38 +153,41 @@ def test_session_respec_disabled_raises(rng):
         sess.step(pts + np.float32([3.0, 0, 0]))
 
 
-def test_executor_cache_across_updates_and_respec_invalidation(rng):
-    """Satellite contract: after a point update that lands in the same
-    padded buckets, the executor must hit its cached compiled launch
-    schedule; a respec must invalidate every executor cache cleanly."""
+def test_session_retrace_contract_across_replans_and_respec(rng):
+    """Replan and replay are the SAME compiled program (the two branches of
+    the device `lax.cond`): an above-threshold step must not retrace, and
+    only a respec — which changes the frozen spec the program specializes
+    on — may compile new step variants. The session stays exact throughout."""
     pts = rng.random((1300, 3)).astype(np.float32)
-    sess = SimulationSession(pts, SearchParams(radius=0.1, k=8))
+    params = SearchParams(radius=0.1, k=8, knn_window="exact")
+    sess = SimulationSession(pts, params)
     sess.step(pts)
-    ex = sess.search.executor
-    st0 = ex.stats()
-    assert st0["launcher_cache_entries"] >= 1
-    # update + fast step: same buckets -> same launcher, no new signatures
-    sess.step(_drift(rng, pts, 0.0003))
-    st1 = ex.stats()
-    assert st1["launcher_cache_entries"] == st0["launcher_cache_entries"]
-    assert st1["signatures"] == st0["signatures"]
-    assert st1["last"]["compilations"] == 0
-    # a replan with unchanged bucket shapes also reuses the launcher
+    pts = _drift(rng, pts, 0.0003)
+    sess.step(pts)                      # fast step (replay variant compiled)
+    cache = sess.stats()["step_cache_size"]
+    assert sess.report.fast
+    # a replan with unchanged shapes re-enters the same compiled step: the
+    # cond simply takes the other branch
     big = sess.spec.cell_size
     pts2 = pts.copy()
     pts2[3] += np.float32([big, 0, 0])
-    sess.step(pts2)
+    res = sess.step(pts2)
     assert sess.report.replanned
-    assert ex.stats()["launcher_cache_entries"] \
-        == st0["launcher_cache_entries"]
-    # respec: every cache keyed on the old spec must be dropped
-    sess.step(pts2 + np.float32([4.0, 0, 0]))
+    assert sess.stats()["step_cache_size"] == cache
+    _assert_oracle_exact(res, pts2, pts2, 0.1, 8)
+    # respec: new frozen spec -> the old spec's step variants are released
+    # and replaced by the new specialization, exact results throughout
+    pts3 = (pts2 + np.float32([4.0, 0, 0])).astype(np.float32)
+    res = sess.step(pts3)
     assert sess.report.respecced
-    st2 = ex.stats()
-    assert st2["invalidations"] == 1
-    # caches were rebuilt for the new spec by the post-respec replan only
-    assert st2["plan_cache_entries"] == 1
-    assert st2["launcher_cache_entries"] == 1
+    assert sess.stats()["respecs"] == 1
+    assert sess.stats()["step_cache_size"] == 1     # old variants dropped
+    _assert_oracle_exact(res, pts3, pts3, 0.1, 8)
+    # and the session re-enters the fast path on the new spec
+    pts4 = _drift(rng, pts3 - np.float32([4.0, 0, 0]), 0.0002) \
+        + np.float32([4.0, 0, 0])
+    sess.step(pts4.astype(np.float32))
+    assert sess.report.fast
 
 
 def test_session_self_query_shares_device_buffer(rng):

@@ -162,3 +162,25 @@ def test_warmup_stats_surface(rng):
     assert st["signatures"] >= 1
     assert "jit_cache_sizes" in st
     assert ns.report.t_search > 0
+
+
+def test_capture_plan_replay_matches_direct_query(rng):
+    """capture_plan/execute(reuse=...) is public eager surface (the session
+    now replays plans on device, core/api.py, but eager steppers can still
+    capture once and replay): a replayed margin-inflated plan must match a
+    direct query exactly in knn mode, with zero host planning on replay."""
+    pts = rng.random((1500, 3)).astype(np.float32)
+    qs = rng.random((384, 3)).astype(np.float32)
+    params = SearchParams(radius=0.1, k=8, knn_window="exact")
+    ns = NeighborSearch(pts, params, SearchOpts())
+    handle = ns.executor.capture_plan(qs, margin=1)
+    res_r = ns.executor.execute(qs, reuse=handle)
+    res_d = NeighborSearch(pts, params, SearchOpts()).query(qs)
+    for a, b in zip(_result_tuple(res_r), _result_tuple(res_d)):
+        d2a, d2b = np.asarray(a), np.asarray(b)
+        if d2a.dtype == np.float32 or d2a.dtype == np.float64:
+            np.testing.assert_array_equal(d2a, d2b)
+    np.testing.assert_array_equal(np.asarray(res_r.counts),
+                                  np.asarray(res_d.counts))
+    last = ns.executor.stats()["last"]
+    assert last["plan_reused"] and last["plan_fetches"] == 0

@@ -112,3 +112,39 @@ assert np.array_equal(np.asarray(xb["w"]), np.arange(32).reshape(8, 4))
 print("REMESH-OK")
 """)
     assert "REMESH-OK" in out
+
+
+def test_api_query_composes_with_shard_map():
+    """The functional core's acceptance composition: stacked same-spec
+    scenes sharded over a device mesh axis, a vmapped api.query per shard —
+    per-scene results must match the single-device call bitwise."""
+    out = _run("""
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+import repro.api as api
+from repro.core import SearchOpts, SearchParams, choose_grid_spec
+from repro.core.distributed import _shard_map, _SHARD_MAP_KW
+from repro.launch.mesh import make_mesh_compat
+rng = np.random.default_rng(5)
+B = 8
+params = SearchParams(radius=0.1, k=8, knn_window="exact")
+scenes = [rng.random((900, 3)).astype(np.float32) for _ in range(B)]
+qss = [rng.random((128, 3)).astype(np.float32) for _ in range(B)]
+spec = choose_grid_spec(np.concatenate(scenes), params.radius)
+idxs = [api.build_index(s, params, SearchOpts(), spec=spec) for s in scenes]
+stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *idxs)
+qstack = jnp.stack([jnp.asarray(q) for q in qss])
+mesh = make_mesh_compat((B,), ("pod",))
+fn = _shard_map(lambda idx, qs: jax.vmap(api.query)(idx, qs),
+                mesh=mesh, in_specs=(P("pod"), P("pod")),
+                out_specs=P("pod"), **_SHARD_MAP_KW)
+res = jax.jit(fn)(stacked, qstack)
+for b in range(B):
+    one = api.query(idxs[b], qss[b])
+    assert np.array_equal(np.asarray(res.indices[b]), np.asarray(one.indices))
+    assert np.array_equal(np.asarray(res.distances2[b]),
+                          np.asarray(one.distances2))
+    assert np.array_equal(np.asarray(res.counts[b]), np.asarray(one.counts))
+print("SHARD-MATCH")
+""")
+    assert "SHARD-MATCH" in out
