@@ -135,7 +135,12 @@ def run(k=16):
         emit(f"figbatch/{name}/vmapped", t_b / (b * n),
              f"speedup={row['speedup']:.2f}x;one program")
 
+    out = {}
+    if os.path.exists(OUT_PATH):        # accumulate across smoke/full runs
+        with open(OUT_PATH) as f:
+            out = json.load(f)
+    out.update(results)
     with open(OUT_PATH, "w") as f:
-        json.dump(results, f, indent=2, sort_keys=True)
+        json.dump(out, f, indent=2, sort_keys=True)
         f.write("\n")
     return results

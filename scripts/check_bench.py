@@ -1,0 +1,94 @@
+#!/usr/bin/env python
+"""CI regression gate for the vmapped batch benchmark (scripts/ci.sh).
+
+Compares the freshly-written ``BENCH_batch.json`` against the committed
+baseline (``git show HEAD:BENCH_batch.json``) and FAILS if the vmapped
+path regressed by more than the tolerance on any case present in both.
+
+The gated statistic is the *speedup ratio* (sequential / vmapped per
+frame), not absolute wall time: the ratio cancels machine speed, so the
+gate is meaningful on shared CI hardware where absolute timings swing far
+more than any real regression. Knobs:
+
+  REPRO_BENCH_TOL    fractional regression tolerance (default 0.10)
+  REPRO_BENCH_GATE   0 disables the gate (always exit 0)
+
+Usage: python scripts/check_bench.py [BENCH_batch.json]
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+TOL = float(os.environ.get("REPRO_BENCH_TOL", "0.10"))
+GATE = os.environ.get("REPRO_BENCH_GATE", "1") != "0"
+METRIC = "speedup"
+
+
+def _baseline(path: str) -> dict | None:
+    """Committed baseline, or None with a printed reason (the gate fails
+    open on environments without git history — a tarball export cannot be
+    gated — but says so loudly instead of silently passing)."""
+    cwd = os.path.dirname(os.path.abspath(path)) or "."
+    try:
+        subprocess.run(["git", "rev-parse", "HEAD"], capture_output=True,
+                       check=True, cwd=cwd)
+    except (subprocess.CalledProcessError, FileNotFoundError):
+        print("check_bench: WARNING — no git history here; the regression "
+              "gate cannot run (baseline lives in HEAD)")
+        return None
+    try:
+        blob = subprocess.run(
+            ["git", "show", f"HEAD:{os.path.basename(path)}"],
+            capture_output=True, text=True, check=True, cwd=cwd).stdout
+        return json.loads(blob)
+    except subprocess.CalledProcessError:
+        print(f"check_bench: {os.path.basename(path)} not committed at "
+              "HEAD — nothing to gate against yet")
+        return None
+    except json.JSONDecodeError:
+        print("check_bench: WARNING — committed baseline is not valid "
+              "JSON; skipping")
+        return None
+
+
+def main() -> int:
+    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_batch.json"
+    if not GATE:
+        print("check_bench: gate disabled (REPRO_BENCH_GATE=0)")
+        return 0
+    if not os.path.exists(path):
+        print(f"check_bench: {path} missing — run `benchmarks.run figbatch`")
+        return 1
+    with open(path) as f:
+        current = json.load(f)
+    base = _baseline(path)
+    if base is None:
+        return 0
+    shared = sorted(set(current) & set(base))
+    if not shared:
+        print("check_bench: no overlapping cases with the baseline — "
+              "skipping (commit the smoke row to enable the gate)")
+        return 0
+    failures = []
+    for case in shared:
+        new = float(current[case].get(METRIC, 0.0))
+        old = float(base[case].get(METRIC, 0.0))
+        verdict = "ok"
+        if old > 0 and new < old * (1.0 - TOL):
+            verdict = "REGRESSED"
+            failures.append(case)
+        print(f"check_bench: {case}: {METRIC} {old:.3f} -> {new:.3f} "
+              f"[{verdict}]")
+    if failures:
+        print(f"check_bench: FAIL — {len(failures)} case(s) regressed "
+              f">{TOL:.0%} vs committed baseline: {', '.join(failures)}")
+        return 1
+    print(f"check_bench: OK ({len(shared)} case(s) within {TOL:.0%})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

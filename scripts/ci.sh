@@ -15,8 +15,11 @@ python -m pytest -x -q tests/test_api.py::test_public_api_snapshot
 REPRO_BENCH_SMOKE=1 python -m benchmarks.run figtp
 
 # smoke the multi-scene batching benchmark (vmapped functional query vs
-# sequential sessions; asserts scene-by-scene equality, BENCH_batch.json)
+# sequential sessions; asserts scene-by-scene equality, BENCH_batch.json),
+# then gate: fail if the vmapped speedup regressed >10% vs the committed
+# baseline (ratio-gated so machine speed cancels; see scripts/check_bench.py)
 REPRO_BENCH_SMOKE=1 python -m benchmarks.run figbatch
+python scripts/check_bench.py BENCH_batch.json
 
 # smoke the dynamic-scene session path: the SPH example on the session
 # (and its legacy A/B flag) + the session-vs-rebuild benchmark, so the

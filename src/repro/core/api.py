@@ -31,17 +31,25 @@ padded-bucket signatures. The eager host-planned executor remains the
 optimizing path (it additionally folds bundles by the cost model);
 ``SearchOpts.w_ladder`` coarsens the traced ladder explicitly.
 
-``use_pallas`` applies to the eager executor path only: the Pallas search
-kernel derives its tile-window anchors from host metadata (DESIGN.md
-section 3 open item), so the traced path always uses the jnp tile search.
-The Pallas *update* kernel is traceable and is honored by
-``update_index``.
+``use_pallas`` now composes with the traced path: the fused kernel's
+tile-window anchors are computed on device (a traced per-tile min/max over
+the scheduled queries' cell coords, delivered to the kernel by scalar
+prefetch), and the per-tile ``lax.switch`` is replaced by **level-segmented
+launches** — ``schedule_by_level`` makes each ladder level's tiles a
+contiguous run, and ``kernels/ops.window_search_segmented`` runs ONE
+masked fused-kernel launch per level, with off-level tiles predicated off
+inside the kernel (``@pl.when``). Under ``vmap`` this keeps the partition
+win: a batched ``lax.switch`` lowers to execute-all-branches, while the
+masked launches stream only each tile's own window. The Pallas *update*
+kernel is likewise traced by ``update_index``. ``REPRO_SEGMENT_LAUNCHES=0``
+falls back to the jnp ``lax.switch`` path (DESIGN.md section 4).
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
 import hashlib
+import os
 
 import jax
 import jax.numpy as jnp
@@ -225,14 +233,29 @@ def plan_query(index: NeighborIndex, queries, *,
                      tile_levels=tile_levels)
 
 
+def _segment_launches() -> bool:
+    """Safety valve: 0 falls the traced fused path back to the per-tile
+    lax.switch jnp dispatch even when use_pallas is set (DESIGN.md
+    section 4). Read at trace time (not import time), so toggling it
+    after import affects every NEW trace — programs already compiled and
+    cached under jit keep the path they were traced with until their
+    cache is cleared or a fresh jit wrapper is made."""
+    return os.environ.get("REPRO_SEGMENT_LAUNCHES", "1") != "0"
+
+
 def execute_plan(index: NeighborIndex, queries,
                  plan: QueryPlan) -> SearchResult:
     """Run ``queries`` through a captured plan (pure, traceable).
 
-    One ``lax.map`` over query tiles; each tile dispatches through
-    ``lax.switch`` to its launch signature's ``window_tile_search`` branch
-    — identical per-tile ops to the executor's launches, so results are
-    exact, and the scatter back through ``perm`` happens on device.
+    jnp path: one ``lax.map`` over query tiles; each tile dispatches
+    through ``lax.switch`` to its launch signature's ``window_tile_search``
+    branch — identical per-tile ops to the executor's launches, so results
+    are exact. Fused path (``SearchOpts(use_pallas=True)``): the plan's
+    (level, Morton)-contiguous tile order feeds the level-segmented
+    Pallas schedule (``kernels/ops.window_search_segmented``) — device
+    tile anchors by scalar prefetch, one masked fused-kernel launch per
+    ladder level. Either way the scatter back through ``perm`` happens on
+    device and the whole call is one traced program.
     """
     queries = jnp.asarray(queries, jnp.float32)
     params = index.params
@@ -240,23 +263,29 @@ def execute_plan(index: NeighborIndex, queries,
     grid, points, spec = index.grid, index.points, index.spec
     qs = queries[plan.perm]
 
-    def _branch(w, skip):
-        def run(qt):
-            return window_tile_search(grid, points, qt, spec, w,
-                                      params.radius, k, skip)
-        return run
+    if index.opts.use_pallas and _segment_launches():
+        from ..kernels.ops import window_search_segmented
+        d2t, idxt, cntt = window_search_segmented(
+            grid, points, qs, spec, plan.ladder, plan.tile_levels,
+            params.radius, k, tile)
+    else:
+        def _branch(w, skip):
+            def run(qt):
+                return window_tile_search(grid, points, qt, spec, w,
+                                          params.radius, k, skip)
+            return run
 
-    branches = [_branch(w, s) for (w, s) in plan.ladder]
+        branches = [_branch(w, s) for (w, s) in plan.ladder]
 
-    def one_tile(args):
-        qt, lvl = args
-        if len(branches) == 1:
-            return branches[0](qt)
-        return jax.lax.switch(jnp.clip(lvl, 0, len(branches) - 1),
-                              branches, qt)
+        def one_tile(args):
+            qt, lvl = args
+            if len(branches) == 1:
+                return branches[0](qt)
+            return jax.lax.switch(jnp.clip(lvl, 0, len(branches) - 1),
+                                  branches, qt)
 
-    d2t, idxt, cntt = jax.lax.map(
-        one_tile, (qs.reshape(-1, tile, 3), plan.tile_levels))
+        d2t, idxt, cntt = jax.lax.map(
+            one_tile, (qs.reshape(-1, tile, 3), plan.tile_levels))
     # padded slots repeat the last real query, so duplicate writes below
     # carry identical rows and the scatter is idempotent
     out_idx = jnp.full((nq, k), -1, jnp.int32).at[plan.perm].set(

@@ -34,6 +34,9 @@ thin shim over the functional core (``core/api.py``):
   scene exactly; the session falls back to the (rare) host-side
   respec-and-rebuild — fresh spec, fresh ``NeighborIndex``, forced replan
   — and re-executes the step so results stay exact across the respec.
+  Respecs carry hysteresis: each one plans with geometrically growing
+  capacity/margin headroom (``SessionOpts.respec_growth``), so adversarial
+  workloads that keep exhausting the spec pay O(log frames) respecs.
 """
 from __future__ import annotations
 
@@ -80,6 +83,23 @@ class SessionOpts:
     ``auto_respec``        respec-and-rebuild when overflow/out-of-bounds
                            is detected (False: raise instead — for tests
                            and workloads that must never pay a respec).
+    ``respec_growth``      respec hysteresis: every respec multiplies the
+                           new spec's capacity slack AND domain margin by
+                           ``respec_growth ** respecs_so_far``, so the
+                           headroom grows geometrically. An adversarial
+                           workload that keeps outrunning the frozen spec
+                           (a constant-velocity escapee, a cell that
+                           points keep piling into) then triggers O(log
+                           frames) respecs instead of one per frame —
+                           each respec buys exponentially more frames.
+                           Set to 1.0 to disable (fixed headroom).
+    ``respec_boost_max``   cap on the accumulated hysteresis multiplier:
+                           capacity scales the dense grid's memory, so
+                           unbounded geometric growth would trade a cheap
+                           respec for an allocation failure on a
+                           long-lived adversarial session. Past the cap
+                           the respec cadence degrades gracefully from
+                           O(log frames) back to O(frames / cap).
     """
 
     displacement_frac: float = 0.45
@@ -88,6 +108,8 @@ class SessionOpts:
     domain_margin_radii: float = 1.0
     max_dim: int = 256
     auto_respec: bool = True
+    respec_growth: float = 2.0
+    respec_boost_max: float = 64.0
 
 
 @dataclasses.dataclass
@@ -112,15 +134,20 @@ class StepReport:
 
 
 def session_grid_spec(points: np.ndarray, radius: float,
-                      sopts: SessionOpts = SessionOpts()) -> GridSpec:
+                      sopts: SessionOpts = SessionOpts(),
+                      boost: float = 1.0) -> GridSpec:
     """Host-side planning of a session's *frozen* grid: the static policy
     of ``choose_grid_spec`` plus drift headroom (domain margin, capacity
-    slack) so the spec survives many frames of motion."""
+    slack) so the spec survives many frames of motion.
+
+    ``boost`` scales both headroom knobs — the respec-hysteresis factor
+    (``respec_growth ** respecs``) the session passes on each respec so
+    repeated exhaustion buys geometrically growing headroom."""
     return choose_grid_spec(
         np.asarray(points, np.float32), radius,
         max_dim=sopts.max_dim,
-        capacity_slack=sopts.capacity_slack,
-        domain_margin=sopts.domain_margin_radii * float(radius),
+        capacity_slack=sopts.capacity_slack * boost,
+        domain_margin=sopts.domain_margin_radii * float(radius) * boost,
     )
 
 
@@ -324,15 +351,22 @@ class SimulationSession:
                 raise RuntimeError(
                     f"frozen grid exhausted (overflow={overflow}, "
                     f"out_of_bounds={oob}) and auto_respec is disabled")
+            # respec hysteresis: each respec plans with geometrically more
+            # capacity/margin headroom, so an adversarial pile-up or
+            # escapee costs O(log frames) respecs, not one per frame
+            self._counters["respecs"] += 1
+            boost = min(
+                float(self.sopts.respec_growth)
+                ** int(self._counters["respecs"]),
+                float(self.sopts.respec_boost_max))
             spec = session_grid_spec(
                 np.asarray(jax.device_get(pts)), index.params.radius,
-                self.sopts)
+                self.sopts, boost=boost)
             index = api.build_index(pts, index.params, index.opts, spec=spec)
             # release every step variant compiled against the old spec
             # (the new-spec trace replaces them; the analogue of the
             # executor path's invalidate())
             self._step_fn.clear_cache()
-            self._counters["respecs"] += 1
             rep.respecced = True
             out = self._dispatch(index, pts, q, anchor_q, True, self_query)
             index3, plan2, anchor_q2, res, flags, stats = out

@@ -13,15 +13,16 @@ The executor keeps the whole execution phase device-resident:
   * **async dispatch + on-device scatter** — the whole launch schedule
     (per group: gather -> padded search -> scatter through the composed
     schedule∘partition permutation with ``.at[].set``) runs as ONE jitted
-    program on the jnp path, and as a loop of non-blocking dispatches on
-    the Pallas path. No per-bundle ``device_get``, no numpy scatter;
+    program with donated output buffers, on BOTH the jnp and the Pallas
+    path (the fused kernel's tile-window anchors are computed on device —
+    ``kernels/ops.window_search_segmented`` — so no launch needs host
+    metadata). No per-bundle ``device_get``, no numpy scatter;
   * **one-sync contract** — exactly ONE blocking host sync materializes
     the results (``jax.block_until_ready`` over the three output arrays).
     The only other host transfer is the *plan fetch*: one fused
     ``device_get`` of the per-query partition metadata (w_search / skip /
-    rho, plus query cells on the Pallas path) that data-dependent
-    partitioning requires, mirroring the paper's host-side launch
-    orchestration. Both are counted in ``stats()``;
+    rho) that data-dependent partitioning requires, mirroring the paper's
+    host-side launch orchestration. Both are counted in ``stats()``;
   * **plan + compile caching** — host partition/bundle plans are cached
     by value fingerprint and compiled searchers are cached per launch
     signature (the jit cache does the compiling; the executor tracks
@@ -33,6 +34,7 @@ from __future__ import annotations
 import collections
 import hashlib
 import time
+from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -74,9 +76,8 @@ class PlanHandle:
 
     Produced by ``QueryExecutor.capture_plan`` and replayed with
     ``execute(queries, reuse=handle)``: the handle owns the Morton schedule
-    permutation (device), the partition plan and launch groups, the
-    edge-padded per-group selection vectors (device, uploaded once), and —
-    on the Pallas path — the pre-padded per-group host cell coordinates.
+    permutation (device), the partition plan and launch groups, and the
+    edge-padded per-group selection vectors (device, uploaded once).
     Replaying performs ZERO host-side planning: no schedule, no plan fetch,
     no partition/bundle recompute, no padding work. The dynamic-scene
     session (``core/dynamic.py``) holds one handle per plan anchor and
@@ -86,16 +87,14 @@ class PlanHandle:
     """
 
     __slots__ = ("perm", "plan", "bundles", "groups", "sels_dev",
-                 "qcells_groups", "nq", "margin")
+                 "nq", "margin")
 
-    def __init__(self, perm, plan, bundles, groups, sels_dev, qcells_groups,
-                 nq, margin):
+    def __init__(self, perm, plan, bundles, groups, sels_dev, nq, margin):
         self.perm = perm
         self.plan = plan
         self.bundles = bundles
         self.groups = groups
         self.sels_dev = sels_dev
-        self.qcells_groups = qcells_groups
         self.nq = nq
         self.margin = margin
 
@@ -131,23 +130,14 @@ class QueryExecutor:
         """
         ns = self.ns
         nq = queries_s.shape[0]
-        need_cells = ns.opts.use_pallas
         partitioned = ns.opts.partition and ns.statics.has_megacells
 
-        fetch = []
         if partitioned:
             w_dev, s_dev, r_dev = compute_megacells(
                 ns.grid, queries_s, ns.statics, ns.params)
-            fetch += [w_dev, s_dev, r_dev]
-        if need_cells:
-            fetch.append(ns.spec.cell_of(queries_s))
-        if fetch:
-            fetched = [np.asarray(a) for a in jax.device_get(tuple(fetch))]
+            w_np, s_np, r_np = (np.asarray(a) for a in jax.device_get(
+                (w_dev, s_dev, r_dev)))
             self._last["plan_fetches"] += 1
-        qcells = fetched.pop() if need_cells else None
-
-        if partitioned:
-            w_np, s_np, r_np = fetched[:3]
             if margin:
                 w_np, s_np = inflate_plan_inputs(
                     w_np, s_np, margin=margin, w_full=ns.statics.w_full,
@@ -161,7 +151,7 @@ class QueryExecutor:
             self._plan_cache.move_to_end(key)
             self._last["plan_cache_hit"] = True
             plan, bundles, groups = hit
-            return plan, bundles, groups, qcells
+            return plan, bundles, groups
 
         plan = (plan_partitions(w_np, s_np, r_np, ns.statics.w_full)
                 if partitioned else trivial_plan(nq, ns.statics.w_full))
@@ -170,21 +160,13 @@ class QueryExecutor:
         self._plan_cache[key] = (plan, bundles, groups)
         if len(self._plan_cache) > _PLAN_CACHE_MAX:
             self._plan_cache.popitem(last=False)
-        return plan, bundles, groups, qcells
+        return plan, bundles, groups
 
-    def _prepare_launch(self, groups, qcells):
-        """Edge-pad each group's selection to its bucket (device) and, on
-        the Pallas path, pre-pad the per-group host cell coordinates."""
-        sels_dev = tuple(jnp.asarray(
+    def _prepare_launch(self, groups):
+        """Edge-pad each group's selection to its bucket (device)."""
+        return tuple(jnp.asarray(
             np.pad(g.sel, (0, g.pad_n - g.sel.shape[0]), mode="edge"),
             jnp.int32) for g in groups)
-        qcells_groups = None
-        if qcells is not None:
-            qcells_groups = tuple(
-                np.pad(qcells[g.sel],
-                       ((0, g.pad_n - g.sel.shape[0]), (0, 0)), mode="edge")
-                for g in groups)
-        return sels_dev, qcells_groups
 
     def capture_plan(self, queries, *, qcells_dev: Array | None = None,
                      margin: int = 0) -> PlanHandle:
@@ -208,13 +190,13 @@ class QueryExecutor:
         else:
             perm, _ = ns._schedule(queries)
         queries_s = queries[perm]
-        plan, bundles, groups, qcells = self._plan(queries_s, margin=margin)
-        sels_dev, qcells_groups = self._prepare_launch(groups, qcells)
+        plan, bundles, groups = self._plan(queries_s, margin=margin)
+        sels_dev = self._prepare_launch(groups)
         self._totals["plan_fetches"] += self._last["plan_fetches"]
         self._totals["plan_captures"] += 1
         return PlanHandle(perm=perm, plan=plan, bundles=bundles,
-                          groups=groups, sels_dev=sels_dev,
-                          qcells_groups=qcells_groups, nq=nq, margin=margin)
+                          groups=groups, sels_dev=sels_dev, nq=nq,
+                          margin=margin)
 
     def _build_groups(self, plan: PartitionPlan,
                       bundles) -> list[LaunchGroup]:
@@ -252,15 +234,17 @@ class QueryExecutor:
         counts drift within the same buckets (SPH stepping) reuse the
         compiled schedule unchanged.
 
-        The Pallas path is excluded (its tile-window anchors are host
-        metadata computed from the plan fetch) and uses the per-group
-        dispatch loop in ``execute`` instead.
+        Covers the Pallas path too: ``window_search_pallas`` is pure
+        traced JAX (tile-window anchors computed on device via the
+        level-segmented launches of ``kernels/ops``), so the fused kernels
+        compile INTO the launch schedule. The three output buffers are
+        donated — the caller hands in fresh init arrays and XLA scatters
+        into them in place instead of materializing copies.
         """
         ns = self.ns
-        if ns.opts.use_pallas:
-            return None
         metas = tuple((g.w_search, g.skip_test, g.pad_n) for g in groups)
-        key = (metas, nq, ns.params.k, ns.opts.query_tile)
+        key = (metas, nq, ns.params.k, ns.opts.query_tile,
+               ns.opts.use_pallas)
         launcher = self._launcher_cache.get(key)
         if launcher is not None:
             self._launcher_cache.move_to_end(key)
@@ -271,13 +255,11 @@ class QueryExecutor:
                                  ns.opts.query_tile)
         for g in groups:
             self._signatures.add((g.w_search, g.skip_test, g.pad_n, tile,
-                                  k, False))
+                                  k, ns.opts.use_pallas))
 
-        @jax.jit
-        def launcher(grid, points, queries_s, perm, sels):
-            out_idx = jnp.full((nq, k), -1, jnp.int32)
-            out_d2 = jnp.full((nq, k), jnp.inf, jnp.float32)
-            out_cnt = jnp.zeros((nq,), jnp.int32)
+        @partial(jax.jit, donate_argnums=(5, 6, 7))
+        def launcher(grid, points, queries_s, perm, sels,
+                     out_idx, out_d2, out_cnt):
             for (w, skip, _pad_n), sel in zip(metas, sels):
                 # sel arrives edge-padded to the bucket: padded slots repeat
                 # the group's last real query, so their searched rows are
@@ -296,42 +278,6 @@ class QueryExecutor:
         if len(self._launcher_cache) > _LAUNCHER_CACHE_MAX:
             self._launcher_cache.popitem(last=False)
         return launcher
-
-    def _dispatch_loop(self, groups, queries_s, perm, sels_dev,
-                       qcells_groups, nq: int, k: int):
-        """Per-group async dispatch (Pallas path): each launch needs host
-        tile-anchor metadata from the plan fetch, so the schedule cannot be
-        a single jitted program — but every dispatch is still non-blocking
-        with on-device scatter. Selections and cell coordinates arrive
-        pre-padded (``_prepare_launch``), so a replayed plan does no
-        per-step padding work."""
-        ns = self.ns
-        out_idx = jnp.full((nq, k), -1, jnp.int32)
-        out_d2 = jnp.full((nq, k), jnp.inf, jnp.float32)
-        out_cnt = jnp.zeros((nq,), jnp.int32)
-        searcher = ns._searcher()
-        for gi, g in enumerate(groups):
-            n_b = g.sel.shape[0]
-            sel_dev = sels_dev[gi]               # edge-padded to the bucket
-            qb = queries_s[sel_dev]
-            kw = {}
-            if qcells_groups is not None:
-                kw["qcells"] = qcells_groups[gi]
-            sig = (g.w_search, g.skip_test, g.pad_n, ns.opts.query_tile,
-                   k, ns.opts.use_pallas)
-            if sig not in self._signatures:
-                self._signatures.add(sig)
-                self._last["compilations"] += 1
-            idx, d2, cnt = searcher(
-                ns.grid, ns.points, qb, ns.spec,
-                g.w_search, ns.params.radius, k,
-                g.skip_test, ns.opts.query_tile, **kw)
-            orig = perm[sel_dev[:n_b]]
-            out_idx = out_idx.at[orig].set(idx[:n_b])
-            out_d2 = out_d2.at[orig].set(d2[:n_b])
-            out_cnt = out_cnt.at[orig].set(cnt[:n_b])
-            self._last["dispatches"] += 1
-        return out_idx, out_d2, out_cnt
 
     # -- execution ----------------------------------------------------------
 
@@ -357,13 +303,13 @@ class QueryExecutor:
             perm = reuse.perm
             queries_s = queries[perm]
             plan, bundles, groups = reuse.plan, reuse.bundles, reuse.groups
-            sels_dev, qcells_groups = reuse.sels_dev, reuse.qcells_groups
+            sels_dev = reuse.sels_dev
             self._last["plan_reused"] = True
         else:
             perm, _inv = ns._schedule(queries)
             queries_s = queries[perm]
-            plan, bundles, groups, qcells = self._plan(queries_s)
-            sels_dev, qcells_groups = self._prepare_launch(groups, qcells)
+            plan, bundles, groups = self._plan(queries_s)
+            sels_dev = self._prepare_launch(groups)
         ns.report.t_opt = time.perf_counter() - t0
         ns.report.num_partitions = plan.num_partitions
         ns.report.bundles = bundles
@@ -372,15 +318,15 @@ class QueryExecutor:
 
         t0 = time.perf_counter()
         launcher = self._get_launcher(groups, nq)
-        if launcher is not None:
-            # selections are edge-padded to their buckets so the launcher
-            # only ever sees bucketed shapes (zero retraces on count drift)
-            out_idx, out_d2, out_cnt = launcher(
-                ns.grid, ns.points, queries_s, perm, sels_dev)
-            self._last["dispatches"] = 1
-        else:
-            out_idx, out_d2, out_cnt = self._dispatch_loop(
-                groups, queries_s, perm, sels_dev, qcells_groups, nq, k)
+        # selections are edge-padded to their buckets so the launcher only
+        # ever sees bucketed shapes (zero retraces on count drift); the
+        # freshly-initialized output buffers are donated into the program
+        out_idx, out_d2, out_cnt = launcher(
+            ns.grid, ns.points, queries_s, perm, sels_dev,
+            jnp.full((nq, k), -1, jnp.int32),
+            jnp.full((nq, k), jnp.inf, jnp.float32),
+            jnp.zeros((nq,), jnp.int32))
+        self._last["dispatches"] = 1
 
         # one-sync contract: the single blocking materialization
         jax.block_until_ready((out_idx, out_d2, out_cnt))
@@ -437,8 +383,9 @@ class QueryExecutor:
             pass
         if self.ns.opts.use_pallas:
             try:
-                from ..kernels.knn_tile import knn_tile
+                from ..kernels.knn_tile import knn_tile, knn_tile_anchored
                 sizes["knn_tile"] = knn_tile._cache_size()
+                sizes["knn_tile_anchored"] = knn_tile_anchored._cache_size()
             except AttributeError:                  # pragma: no cover
                 pass
         return {

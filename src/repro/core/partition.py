@@ -219,6 +219,13 @@ def launch_signatures(
     explicit one; queries then round UP to the nearest ladder window and
     the sphere-test skip is disabled (a coarser-but-always-exact ladder
     that bounds the ``lax.switch`` branch count).
+
+    The fused traced path derives its static launch *sizes* from this
+    ladder too: ``kernels/ops.segment_levels`` extends the ``2w+1``
+    signature windows with geometric escalations (a Morton tile's shared
+    window must also cover the tile's cell spread) capped at the grid
+    dims — the host-static bound that keeps the scalar-prefetch Pallas
+    schedule's shapes static (DESIGN.md section 3).
     """
     return _launch_signatures_cached(statics, params, margin, enabled,
                                      w_ladder)

@@ -58,7 +58,11 @@ def schedule_by_level(ccoord: Array, levels: Array,
     launch-signature level, so every launch group is a contiguous run of
     scheduled slots AND keeps the Morton coherence order within itself —
     identical layout discipline to the executor's signature-batched groups,
-    derived entirely on device. ``morton=False`` mirrors
+    derived entirely on device. This contiguity is also what the
+    level-segmented Pallas schedule leans on (``kernels/ops``): each
+    ladder level's tiles form one dense run, so the per-level masked
+    launches skip long prefixes/suffixes of off-level tiles instead of
+    interleaving them. ``morton=False`` mirrors
     ``SearchOpts(schedule=False)`` (input order within each level).
     """
     n = ccoord.shape[0]

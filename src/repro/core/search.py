@@ -299,6 +299,10 @@ class NeighborSearch:
                             counts=jnp.asarray(out_cnt))
 
     def _searcher(self):
+        # both searchers are pure traced JAX with the same positional
+        # signature; the Pallas one runs the level-segmented fused schedule
+        # (device tile anchors by scalar prefetch, kernels/ops), so the
+        # executor compiles either into its one-program launch schedule
         if self.opts.use_pallas:
             from ..kernels.ops import window_search_pallas
             return window_search_pallas

@@ -10,6 +10,23 @@ DESIGN.md section 2):
              merge into running best-K held in VMEM scratch
   last step: emit [TQ, K] distances + indices
 
+Two entry points share the loop body:
+
+* :func:`knn_tile` — the candidate-id stream ([n_tiles, M] int32) is
+  assembled by the caller (an XLA dynamic-slice gather over the dense
+  grid). This is the legacy eager path.
+* :func:`knn_tile_anchored` — the whole window gather moves INSIDE the
+  kernel: per-tile window anchors and launch levels arrive as
+  scalar-prefetch operands (``pltpu.PrefetchScalarGridSpec``), the dense
+  cell grid stays resident (flattened, constant index map), and each grid
+  step derives its TM candidate ids from pure index arithmetic on the
+  prefetched anchor before gathering positions. Tiles whose prefetched
+  level does not match the launch's level are skipped wholesale
+  (``@pl.when``) — the masked per-level launch of the level-segmented
+  schedule (DESIGN.md section 3), which is what lets the traced functional
+  path (``core/api.py``) run the fused kernel as one compiled program with
+  no host metadata in the loop.
+
 The candidate *positions* are never materialized in HBM: the kernel
 receives only the int32 candidate-id stream ([n_tiles, M], 4 B/candidate)
 plus the coordinate table ([N, 8] f32, resident once), and gathers each TM
@@ -74,19 +91,12 @@ def _merge_topk(best_d2, best_idx, d2, idx, k: int):
     return out_d2, out_idx
 
 
-def _knn_kernel(q_ref, pts_ref, idx_ref, out_d2_ref, out_idx_ref,
-                best_d2, best_idx, *, k: int, r2: float, skip_test: bool,
-                n_m: int, n_pts: int):
-    j = pl.program_id(1)
-
-    @pl.when(j == 0)
-    def _init():
-        best_d2[...] = jnp.full_like(best_d2, _BIG)
-        best_idx[...] = jnp.full_like(best_idx, -1)
-
-    q = q_ref[...]                                        # [TQ, 8]
-    idx = idx_ref[0]                                      # [TM]
-    pts = pts_ref[...]                                    # [N_pad, 8]
+def _stream_candidates(q, pts, idx, best_d2, best_idx, *, k: int, r2: float,
+                       skip_test: bool, n_pts: int):
+    """One candidate-tile step of the streaming top-K (shared by both
+    kernels): gather positions from the resident coordinate table, distance
+    on the MXU, merge into the running best-K scratch behind the
+    threshold guard."""
     # fused gather: candidate positions pulled from the VMEM-resident
     # coordinate table; invalid slots (-1) clip to row 0 and are masked below
     p = jnp.take(pts, jnp.clip(idx, 0, n_pts - 1), axis=0)  # [TM, 8]
@@ -112,11 +122,29 @@ def _knn_kernel(q_ref, pts_ref, idx_ref, out_d2_ref, out_idx_ref,
         best_d2[...] = nd2
         best_idx[...] = nidx
 
+
+def _emit_best(out_d2_ref, out_idx_ref, best_d2, best_idx):
+    out_d2_ref[...] = jnp.where(best_d2[...] >= _BIG, jnp.inf, best_d2[...])
+    out_idx_ref[...] = best_idx[...]
+
+
+def _knn_kernel(q_ref, pts_ref, idx_ref, out_d2_ref, out_idx_ref,
+                best_d2, best_idx, *, k: int, r2: float, skip_test: bool,
+                n_m: int, n_pts: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        best_d2[...] = jnp.full_like(best_d2, _BIG)
+        best_idx[...] = jnp.full_like(best_idx, -1)
+
+    _stream_candidates(q_ref[...], pts_ref[...], idx_ref[0], best_d2,
+                       best_idx, k=k, r2=r2, skip_test=skip_test,
+                       n_pts=n_pts)
+
     @pl.when(j == n_m - 1)
     def _emit():
-        out_d2_ref[...] = jnp.where(best_d2[...] >= _BIG, jnp.inf,
-                                    best_d2[...])
-        out_idx_ref[...] = best_idx[...]
+        _emit_best(out_d2_ref, out_idx_ref, best_d2, best_idx)
 
 
 @functools.partial(
@@ -180,4 +208,139 @@ def knn_tile(
         ],
         interpret=interpret,
     )(qp, pts8, wnd_idx)
+    return out_d2, out_idx
+
+
+def _knn_anchored_kernel(anchors_ref, levels_ref, q_ref, pts_ref, dense_ref,
+                         out_d2_ref, out_idx_ref, best_d2, best_idx, *,
+                         k: int, r2: float, skip_test: bool, level: int,
+                         n_m: int, n_pts: int, m: int, tm: int,
+                         ws: tuple, dims: tuple, cap: int):
+    """Level-masked anchored variant: the window-candidate gather happens
+    here, from the resident flattened dense grid, using the scalar-prefetched
+    per-tile anchor. Tiles whose prefetched level != ``level`` skip both the
+    gather and the merge (their output rows are written neutral at the last
+    step so the caller's per-level combine is a plain select)."""
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    mine = levels_ref[i] == level
+
+    @pl.when(mine & (j == 0))
+    def _init():
+        best_d2[...] = jnp.full_like(best_d2, _BIG)
+        best_idx[...] = jnp.full_like(best_idx, -1)
+
+    @pl.when(mine)
+    def _step():
+        ax = anchors_ref[i, 0]
+        ay = anchors_ref[i, 1]
+        az = anchors_ref[i, 2]
+        # candidate ids for chunk j from pure index arithmetic on the
+        # prefetched anchor: flat window position -> (window cell, slot) ->
+        # global cell -> position in the flattened dense grid. The anchor is
+        # pre-clipped so every window cell is in bounds; only the m..m_pad
+        # tail (candidate positions past the window) needs masking.
+        c = j * tm + jax.lax.broadcasted_iota(jnp.int32, (1, tm), 1)[0]
+        slot = c % cap
+        cell = c // cap
+        iz = cell % ws[2]
+        iy = (cell // ws[2]) % ws[1]
+        ix = cell // (ws[2] * ws[1])
+        flat = (((ax + ix) * dims[1] + (ay + iy)) * dims[2]
+                + (az + iz)) * cap + slot
+        n_flat = dims[0] * dims[1] * dims[2] * cap
+        cand = jnp.take(dense_ref[...], jnp.clip(flat, 0, n_flat - 1))
+        idx = jnp.where(c < m, cand, -1)                  # [TM]
+        _stream_candidates(q_ref[...], pts_ref[...], idx, best_d2, best_idx,
+                           k=k, r2=r2, skip_test=skip_test, n_pts=n_pts)
+
+    @pl.when(mine & (j == n_m - 1))
+    def _emit():
+        _emit_best(out_d2_ref, out_idx_ref, best_d2, best_idx)
+
+    @pl.when(jnp.logical_not(mine) & (j == n_m - 1))
+    def _emit_neutral():
+        out_d2_ref[...] = jnp.full_like(out_d2_ref, jnp.inf)
+        out_idx_ref[...] = jnp.full_like(out_idx_ref, -1)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("level", "ws", "dims", "cap", "k", "r2", "skip_test",
+                     "tq", "tm", "interpret"))
+def knn_tile_anchored(
+    q: jax.Array,          # [Nq, 3] f32, Nq == n_tiles * tq
+    points: jax.Array,     # [N, 3] f32 coordinate table (gathered in-kernel)
+    dense_flat: jax.Array,  # [Dx*Dy*Dz*cap] i32 flattened cell grid
+    anchors: jax.Array,    # [n_tiles, 3] i32 window anchors (scalar prefetch)
+    levels: jax.Array,     # [n_tiles] i32 per-tile launch level
+    *,
+    level: int,            # this launch's level; other tiles are masked
+    ws: tuple,             # (wx, wy, wz) static window size in cells
+    dims: tuple,           # grid dims (static)
+    cap: int,              # cell capacity (static)
+    k: int,
+    r2: float,
+    skip_test: bool = False,
+    tq: int = DEFAULT_TQ,
+    tm: int = DEFAULT_TM,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """One masked launch of the level-segmented schedule: every query tile
+    whose ``levels`` entry equals ``level`` streams its anchored
+    ``ws[0]*ws[1]*ws[2]*cap`` candidate window through the fused
+    gather→distance→top-K loop; all other tiles are skipped and emit
+    neutral rows (inf / -1). Fully traced — anchors and levels are device
+    arrays delivered by scalar prefetch, so the caller composes under
+    ``jit`` and ``vmap`` with zero host metadata.
+
+    Returns (d2 [Nq, k] ascending inf-padded, idx [Nq, k] -1-padded).
+    """
+    n_tiles = anchors.shape[0]
+    assert q.shape[0] == n_tiles * tq, (q.shape, n_tiles, tq)
+    n_pts = points.shape[0]
+    m = ws[0] * ws[1] * ws[2] * cap
+    tm = min(tm, max(8, m))
+    n_m = (m + tm - 1) // tm
+    n_row_pad = (-n_pts) % 8
+    pts8 = jnp.pad(points.astype(jnp.float32),
+                   ((0, n_row_pad), (0, COORD_PAD - 3)),
+                   constant_values=0.0)
+    qp = jnp.pad(q.astype(jnp.float32), ((0, 0), (0, COORD_PAD - 3)))
+
+    kernel = functools.partial(
+        _knn_anchored_kernel, k=k, r2=float(r2), skip_test=bool(skip_test),
+        level=int(level), n_m=n_m, n_pts=n_pts, m=m, tm=tm, ws=tuple(ws),
+        dims=tuple(dims), cap=int(cap))
+    n_flat = dense_flat.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_tiles, n_m),
+        in_specs=[
+            pl.BlockSpec((tq, COORD_PAD), lambda i, j, a, l: (i, 0)),
+            # coordinate table and dense grid: full blocks with constant
+            # index maps — resident across the whole candidate stream
+            pl.BlockSpec((n_pts + n_row_pad, COORD_PAD),
+                         lambda i, j, a, l: (0, 0)),
+            pl.BlockSpec((n_flat,), lambda i, j, a, l: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tq, k), lambda i, j, a, l: (i, 0)),
+            pl.BlockSpec((tq, k), lambda i, j, a, l: (i, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((tq, k), jnp.float32),
+            pltpu.VMEM((tq, k), jnp.int32),
+        ],
+    )
+    out_d2, out_idx = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n_tiles * tq, k), jnp.float32),
+            jax.ShapeDtypeStruct((n_tiles * tq, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(anchors.astype(jnp.int32), levels.astype(jnp.int32), qp, pts8,
+      dense_flat)
     return out_d2, out_idx

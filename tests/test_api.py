@@ -184,6 +184,112 @@ def test_w_ladder_with_partitioning_disabled_stays_exact(rng):
                                   np.asarray(res_lad.counts))
 
 
+# ---------------------------------------------------------------------------
+# single-program Pallas pipeline (level-segmented launches, DESIGN.md s3)
+# ---------------------------------------------------------------------------
+
+PALLAS_OPTS = SearchOpts(use_pallas=True, query_tile=128)
+
+
+def test_pallas_traced_bitwise_parity_under_jit(rng):
+    """Acceptance: jax.jit(api.query) with SearchOpts(use_pallas=True)
+    compiles the level-segmented fused path end-to-end and produces
+    distances/counts bitwise-equal to the jnp traced path."""
+    pts, qs = _scene(rng)
+    res_j = api.query(api.build_index(pts, PARAMS, SearchOpts()), qs)
+    index_p = api.build_index(pts, PARAMS, PALLAS_OPTS)
+    jitted = jax.jit(api.query)
+    res_p = jitted(index_p, qs)
+    np.testing.assert_array_equal(_d2(res_j), _d2(res_p))
+    np.testing.assert_array_equal(np.asarray(res_j.counts),
+                                  np.asarray(res_p.counts))
+    _assert_indices_valid(res_p, pts, qs, PARAMS.radius)
+    # one compiled program, reused on the second call (the jit cache is
+    # shared across jax.jit(api.query) wrappers, so assert no growth)
+    cache = jitted._cache_size()
+    jitted(index_p, qs)
+    assert jitted._cache_size() == cache
+
+
+def test_pallas_traced_vmap_bitwise(rng):
+    """Acceptance: vmap over stacked same-spec scenes through the fused
+    path matches the per-scene results bitwise — the level-segmented
+    launches (one masked kernel launch per ladder level) batch where the
+    per-tile lax.switch would have executed every branch."""
+    params = SearchParams(radius=0.1, k=8, knn_window="exact")
+    scenes = [rng.random((1200, 3)).astype(np.float32) for _ in range(3)]
+    qss = [rng.random((256, 3)).astype(np.float32) for _ in range(3)]
+    index0 = api.build_index(scenes[0], params, PALLAS_OPTS)
+    idxs = [index0] + [api.build_index(s, params, PALLAS_OPTS,
+                                       spec=index0.spec)
+                       for s in scenes[1:]]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *idxs)
+    qstack = jnp.stack([jnp.asarray(q) for q in qss])
+    bat = jax.jit(jax.vmap(api.query))(stacked, qstack)
+    for b in range(3):
+        one = api.query(idxs[b], qss[b])
+        np.testing.assert_array_equal(np.asarray(bat.distances2[b]),
+                                      np.asarray(one.distances2))
+        np.testing.assert_array_equal(np.asarray(bat.counts[b]),
+                                      np.asarray(one.counts))
+
+
+def test_pallas_traced_range_mode_counts(rng):
+    """The skip-sphere-test entries of the segmented ladder are exact:
+    range-mode counts match the oracle and every returned index is within
+    the radius (the megacell that held >= K in-sphere points stays inside
+    the escalated shared window, bounding the streamed top-K)."""
+    pts, qs = _scene(rng)
+    params = SearchParams(radius=0.1, k=8, mode="range")
+    res = jax.jit(api.query)(api.build_index(pts, params, PALLAS_OPTS), qs)
+    _oi, _od, oc = brute_force_search(jnp.asarray(pts), jnp.asarray(qs),
+                                      params.radius, params.k)
+    np.testing.assert_array_equal(np.asarray(oc), np.asarray(res.counts))
+    _assert_indices_valid(res, pts, qs, params.radius)
+
+
+def test_segment_launches_safety_valve(rng, monkeypatch):
+    """REPRO_SEGMENT_LAUNCHES=0 (read per call, not at import) falls the
+    fused traced path back to the jnp lax.switch dispatch — results stay
+    bitwise identical either way."""
+    pts, qs = _scene(rng, n=900, nq=200)
+    index = api.build_index(pts, PARAMS, PALLAS_OPTS)
+    res_seg = api.query(index, qs)
+    monkeypatch.setenv("REPRO_SEGMENT_LAUNCHES", "0")
+    res_jnp = api.query(index, qs)
+    jaxpr = str(jax.make_jaxpr(api.query)(index, qs))
+    assert "pallas_call" not in jaxpr          # valve really took the exit
+    np.testing.assert_array_equal(_d2(res_seg), _d2(res_jnp))
+    np.testing.assert_array_equal(np.asarray(res_seg.counts),
+                                  np.asarray(res_jnp.counts))
+
+
+def test_pallas_anchors_on_device_zero_host_syncs(rng):
+    """Anchors-on-device: a jitted execute_plan over the fused path must
+    trace end-to-end (any mid-trace host sync — np.asarray / device_get on
+    a tracer, as the old host-metadata anchor computation did — raises
+    TracerArrayConversionError) and compile exactly once (trace-counting
+    pattern from tests/test_executor.py)."""
+    pts, qs = _scene(rng, n=900, nq=200)
+    index = api.build_index(pts, PARAMS, PALLAS_OPTS)
+
+    jitted = jax.jit(api.execute_plan)
+    plan = api.plan_query(index, qs)
+    res = jitted(index, qs, plan)
+    ref = api.execute_plan(index, qs, plan)
+    np.testing.assert_array_equal(_d2(res), _d2(ref))
+    cache = jitted._cache_size()
+    jitted(index, qs, plan)
+    assert jitted._cache_size() == cache
+    # and the fused kernel really is on the traced path: the jaxpr contains
+    # one pallas launch per segment-ladder level (the masked launches),
+    # not a lax.switch over window branches
+    from repro.kernels.ops import segment_levels
+    jaxpr = str(jax.make_jaxpr(api.execute_plan)(index, qs, plan))
+    n_levels = len(segment_levels(plan.ladder, index.spec.dims))
+    assert jaxpr.count("pallas_call") == n_levels
+
+
 def test_grad_safety(rng):
     """Distances are differentiable w.r.t. the query positions through the
     whole traced pipeline (schedule sort, switch dispatch, top-k, scatter)."""

@@ -3,6 +3,8 @@ exactness against a fresh-search oracle on moving points (including across
 respecs), the device-resident staleness steady state (zero host
 replanning, zero per-step stats fetches, zero retraces), and the update
 kernel itself."""
+import math
+
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -142,6 +144,56 @@ def test_session_respec_on_escape_and_overflow(rng):
     assert sess2.report.respecced and sess2.report.overflow > 0
     _assert_oracle_exact(res, squeezed, squeezed, 0.08, 8)
     assert sess2.stats()["respecs"] == 1
+
+
+def test_respec_hysteresis_logarithmic(rng):
+    """Respec hysteresis (ROADMAP): each respec plans geometrically more
+    headroom, so an adversarial workload that keeps outrunning the frozen
+    spec — here a constant-velocity escape from the domain — triggers
+    O(log frames) respecs, not one per frame, while every step stays
+    oracle-exact."""
+    pts = rng.random((400, 3)).astype(np.float32)
+    params = SearchParams(radius=0.1, k=4, knn_window="exact")
+    # max_dim bounds the dense grid as the escaping domain stretches (CPU
+    # test budget); the hysteresis behavior under test is unaffected
+    sess = SimulationSession(pts, params, sopts=SessionOpts(max_dim=48))
+    steps = 24
+    vel = np.float32([3.0 * 0.1, 0.0, 0.0])   # 3 radii per frame: the
+    # initial 1-radius margin is outrun immediately and every frame after
+    respec_frames = []
+    for f in range(steps):
+        cur = (pts + f * vel).astype(np.float32)
+        res = sess.step(cur)
+        if sess.report.respecced:
+            respec_frames.append(f)
+        # counts stay oracle-exact; the distance check needs a coordinate-
+        # scaled tolerance because the expanded |q|^2+|p|^2-2qp form loses
+        # f32 bits as the escaping cloud drifts far from the origin
+        _oi, od, oc = brute_force_search(jnp.asarray(cur), jnp.asarray(cur),
+                                         0.1, 4)
+        np.testing.assert_array_equal(np.asarray(oc),
+                                      np.asarray(res.counts))
+        d_ref = np.where(np.isinf(np.asarray(od)), -1.0, np.asarray(od))
+        d_got = np.where(np.isinf(np.asarray(res.distances2)), -1.0,
+                         np.asarray(res.distances2))
+        np.testing.assert_allclose(d_got, d_ref, atol=1e-5)
+    respecs = sess.stats()["respecs"]
+    # geometric margin growth: each respec buys ~2x more frames than the
+    # last, so ceil(log2(total drift / initial margin)) + O(1) respecs
+    assert respecs <= int(math.ceil(math.log2(steps * 3))) + 2, respecs
+    assert respecs < steps / 2
+    # and the bought headroom is real: the gaps between respecs grow
+    gaps = np.diff([0] + respec_frames)
+    assert respecs >= 2 and (gaps[-1] >= gaps[0])
+
+    # growth disabled reverts to the old behavior: the same adversary
+    # respecs on (nearly) every frame
+    sess0 = SimulationSession(pts, params,
+                              sopts=SessionOpts(respec_growth=1.0,
+                                                max_dim=48))
+    for f in range(10):
+        sess0.step((pts + f * vel).astype(np.float32))
+    assert sess0.stats()["respecs"] >= 8
 
 
 def test_session_respec_disabled_raises(rng):

@@ -7,7 +7,7 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels.distance_tile import distance_tile
-from repro.kernels.knn_tile import knn_tile
+from repro.kernels.knn_tile import knn_tile, knn_tile_anchored
 from repro.kernels.range_tile import range_count
 from repro.kernels.ref import (brute_force_search, pairwise_d2,
                                range_count_ref, topk_select)
@@ -71,6 +71,77 @@ def test_knn_tile_duplicate_points(rng):
     d2, idx = knn_tile(q, p, wnd_idx, k=4, r2=1.0, tq=64, tm=128)
     assert np.allclose(np.asarray(d2), 0.0)
     assert len(set(np.asarray(idx)[0].tolist())) == 4  # distinct indices
+
+
+def _grid_fixture(rng, n=500, r=0.15):
+    from repro.core.grid import build_cell_grid, choose_grid_spec
+    pts = rng.random((n, 3)).astype(np.float32)
+    spec = choose_grid_spec(pts, r)
+    grid = build_cell_grid(jnp.asarray(pts), spec)
+    return pts, spec, grid
+
+
+def test_knn_tile_anchored_matches_id_stream_kernel(rng):
+    """The anchored scalar-prefetch kernel over the whole grid must match
+    knn_tile fed the identical flattened candidate-id stream bitwise: the
+    in-kernel window gather is pure index arithmetic on the same data."""
+    pts, spec, grid = _grid_fixture(rng)
+    qs = jnp.asarray(rng.random((64, 3)), jnp.float32)
+    dense_flat = grid.dense.reshape(-1)
+    d2a, idxa = knn_tile_anchored(
+        qs, jnp.asarray(pts), dense_flat, jnp.zeros((1, 3), jnp.int32),
+        jnp.zeros((1,), jnp.int32), level=0, ws=spec.dims, dims=spec.dims,
+        cap=spec.capacity, k=4, r2=0.15 ** 2, tq=64)
+    d2b, idxb = knn_tile(qs, jnp.asarray(pts), dense_flat[None, :], k=4,
+                         r2=0.15 ** 2, tq=64)
+    np.testing.assert_array_equal(np.asarray(d2a), np.asarray(d2b))
+    np.testing.assert_array_equal(np.asarray(idxa), np.asarray(idxb))
+
+
+def test_knn_tile_anchored_level_masking(rng):
+    """Off-level tiles are predicated off inside the kernel and emit
+    neutral rows — the masked per-level launch of the segmented schedule."""
+    pts, spec, grid = _grid_fixture(rng)
+    qs = jnp.asarray(rng.random((128, 3)), jnp.float32)
+    dense_flat = grid.dense.reshape(-1)
+    anchors = jnp.zeros((2, 3), jnp.int32)
+    levels = jnp.asarray([0, 1], jnp.int32)
+    d2, idx = knn_tile_anchored(
+        qs, jnp.asarray(pts), dense_flat, anchors, levels, level=0,
+        ws=spec.dims, dims=spec.dims, cap=spec.capacity, k=4, r2=0.15 ** 2,
+        tq=64)
+    assert (np.asarray(idx)[64:] == -1).all()       # masked tile: neutral
+    assert np.isinf(np.asarray(d2)[64:]).all()
+    assert (np.asarray(idx)[:64] >= 0).any()        # live tile: real rows
+
+
+def test_knn_tile_anchored_skip_test_wired(rng):
+    """The sphere-test skip is honored by the fused kernel (no silent
+    skip_test=False): with a window that holds >= k in-sphere points the
+    skip path returns the identical top-k, and the flag demonstrably
+    changes behavior when the precondition is violated (out-of-radius
+    candidates survive only under skip)."""
+    pts, spec, grid = _grid_fixture(rng, n=800, r=0.3)
+    qs = jnp.asarray(rng.random((64, 3)) * 0.2 + 0.4, jnp.float32)
+    dense_flat = grid.dense.reshape(-1)
+    kw = dict(level=0, ws=spec.dims, dims=spec.dims, cap=spec.capacity,
+              k=4, tq=64)
+    anchors = jnp.zeros((1, 3), jnp.int32)
+    levels = jnp.zeros((1,), jnp.int32)
+    args = (qs, jnp.asarray(pts), dense_flat, anchors, levels)
+    d2_f, idx_f = knn_tile_anchored(*args, r2=0.3 ** 2, skip_test=False,
+                                    **kw)
+    d2_s, idx_s = knn_tile_anchored(*args, r2=0.3 ** 2, skip_test=True,
+                                    **kw)
+    # dense interior queries: >= k candidates within r, so eliding the r^2
+    # filter must not change the streamed top-k
+    np.testing.assert_array_equal(np.asarray(d2_f), np.asarray(d2_s))
+    np.testing.assert_array_equal(np.asarray(idx_f), np.asarray(idx_s))
+    # tiny radius: the filter empties the result, the skip keeps top-k
+    d2_f2, _ = knn_tile_anchored(*args, r2=1e-8, skip_test=False, **kw)
+    d2_s2, _ = knn_tile_anchored(*args, r2=1e-8, skip_test=True, **kw)
+    assert np.isinf(np.asarray(d2_f2)).all()
+    assert np.isfinite(np.asarray(d2_s2)).any()
 
 
 @pytest.mark.parametrize("m,tm", [(100, 128), (600, 256)])
