@@ -118,7 +118,12 @@ def run(k=16):
              f"fast={row['fast_steps']}/{steps};"
              f"replans={row['replans']}")
 
+    out = {}
+    if os.path.exists(OUT_PATH):        # accumulate across smoke/full runs
+        with open(OUT_PATH) as f:
+            out = json.load(f)
+    out.update(results)
     with open(OUT_PATH, "w") as f:
-        json.dump(results, f, indent=2, sort_keys=True)
+        json.dump(out, f, indent=2, sort_keys=True)
         f.write("\n")
     return results

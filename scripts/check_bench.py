@@ -1,19 +1,23 @@
 #!/usr/bin/env python
-"""CI regression gate for the vmapped batch benchmark (scripts/ci.sh).
+"""CI regression gate for the A/B benchmarks (scripts/ci.sh).
 
-Compares the freshly-written ``BENCH_batch.json`` against the committed
-baseline (``git show HEAD:BENCH_batch.json``) and FAILS if the vmapped
-path regressed by more than the tolerance on any case present in both.
+Compares each freshly-written ``BENCH_*.json`` against its committed
+baseline (``git show HEAD:BENCH_*.json``) and FAILS if the new path
+regressed by more than the tolerance on any case present in both. Gated
+files (every path passed on the command line): ``BENCH_batch.json``
+(vmapped multi-scene batching), ``BENCH_dynamic.json`` (session vs
+rebuild-per-frame), and ``BENCH_shard.json`` (sharded vs single-device
+session).
 
-The gated statistic is the *speedup ratio* (sequential / vmapped per
-frame), not absolute wall time: the ratio cancels machine speed, so the
-gate is meaningful on shared CI hardware where absolute timings swing far
-more than any real regression. Knobs:
+The gated statistic is each row's *speedup ratio* (old path / new path),
+not absolute wall time: the ratio cancels machine speed, so the gate is
+meaningful on shared CI hardware where absolute timings swing far more
+than any real regression. Knobs:
 
   REPRO_BENCH_TOL    fractional regression tolerance (default 0.10)
   REPRO_BENCH_GATE   0 disables the gate (always exit 0)
 
-Usage: python scripts/check_bench.py [BENCH_batch.json]
+Usage: python scripts/check_bench.py [BENCH_batch.json ...]
 """
 from __future__ import annotations
 
@@ -25,6 +29,13 @@ import sys
 TOL = float(os.environ.get("REPRO_BENCH_TOL", "0.10"))
 GATE = os.environ.get("REPRO_BENCH_GATE", "1") != "0"
 METRIC = "speedup"
+
+# per-file tolerance multipliers: the sharded benchmark's multi-slab rows
+# time-slice N forced host devices on one physical CPU, and the dynamic
+# smoke row's rebuild arm is compile-bound — both ratios are inherently
+# noisier than the batch file's — gate them, but at a wider band so
+# scheduler/compile jitter does not read as regression
+_TOL_SCALE = {"BENCH_shard.json": 2.0, "BENCH_dynamic.json": 1.5}
 
 
 def _baseline(path: str) -> dict | None:
@@ -54,13 +65,12 @@ def _baseline(path: str) -> dict | None:
         return None
 
 
-def main() -> int:
-    path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_batch.json"
-    if not GATE:
-        print("check_bench: gate disabled (REPRO_BENCH_GATE=0)")
-        return 0
+def _gate_one(path: str) -> int:
+    """Gate one BENCH file; returns the number of regressed cases (or a
+    synthetic 1 when the fresh file is missing entirely)."""
     if not os.path.exists(path):
-        print(f"check_bench: {path} missing — run `benchmarks.run figbatch`")
+        print(f"check_bench: {path} missing — run the matching "
+              "`benchmarks.run` figure first")
         return 1
     with open(path) as f:
         current = json.load(f)
@@ -69,25 +79,38 @@ def main() -> int:
         return 0
     shared = sorted(set(current) & set(base))
     if not shared:
-        print("check_bench: no overlapping cases with the baseline — "
-              "skipping (commit the smoke row to enable the gate)")
+        print(f"check_bench: {os.path.basename(path)}: no overlapping "
+              "cases with the baseline — skipping (commit the smoke row "
+              "to enable the gate)")
         return 0
+    tol = TOL * _TOL_SCALE.get(os.path.basename(path), 1.0)
     failures = []
     for case in shared:
         new = float(current[case].get(METRIC, 0.0))
         old = float(base[case].get(METRIC, 0.0))
         verdict = "ok"
-        if old > 0 and new < old * (1.0 - TOL):
+        if old > 0 and new < old * (1.0 - tol):
             verdict = "REGRESSED"
             failures.append(case)
-        print(f"check_bench: {case}: {METRIC} {old:.3f} -> {new:.3f} "
-              f"[{verdict}]")
+        print(f"check_bench: {os.path.basename(path)}: {case}: {METRIC} "
+              f"{old:.3f} -> {new:.3f} [{verdict}]")
     if failures:
-        print(f"check_bench: FAIL — {len(failures)} case(s) regressed "
-              f">{TOL:.0%} vs committed baseline: {', '.join(failures)}")
-        return 1
-    print(f"check_bench: OK ({len(shared)} case(s) within {TOL:.0%})")
-    return 0
+        print(f"check_bench: FAIL — {os.path.basename(path)}: "
+              f"{len(failures)} case(s) regressed >{tol:.0%} vs committed "
+              f"baseline: {', '.join(failures)}")
+    else:
+        print(f"check_bench: {os.path.basename(path)}: OK "
+              f"({len(shared)} case(s) within {tol:.0%})")
+    return len(failures)
+
+
+def main() -> int:
+    paths = sys.argv[1:] or ["BENCH_batch.json"]
+    if not GATE:
+        print("check_bench: gate disabled (REPRO_BENCH_GATE=0)")
+        return 0
+    bad = sum(_gate_one(p) for p in paths)
+    return 1 if bad else 0
 
 
 if __name__ == "__main__":

@@ -4,28 +4,42 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-python -m pytest -x -q
+# main sweep minus the mesh suite, which gets its own invocation below
+# (running it in both would double the slowest part of CI)
+python -m pytest -x -q --ignore=tests/test_multidevice.py
 
 # the public-API snapshot gate on its own (fast, fails loud when repro.api
 # exports change without a CHANGES.md note — see tests/test_api.py)
 python -m pytest -x -q tests/test_api.py::test_public_api_snapshot
 
+# the mesh paths (sharded sessions, distributed routing, shard_map
+# composition) under 8 forced host devices so they execute on CPU CI even
+# when the default device count is 1 (the tests also re-exec themselves in
+# subprocesses with this env; setting it here makes the requirement
+# visible and keeps any future in-process mesh test working)
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    python -m pytest -x -q tests/test_multidevice.py
+
 # smoke the executor benchmark (shrunken workloads; asserts the executor
 # path is oracle-identical to the host loop and writes BENCH_executor.json)
 REPRO_BENCH_SMOKE=1 python -m benchmarks.run figtp
 
-# smoke the multi-scene batching benchmark (vmapped functional query vs
-# sequential sessions; asserts scene-by-scene equality, BENCH_batch.json),
-# then gate: fail if the vmapped speedup regressed >10% vs the committed
-# baseline (ratio-gated so machine speed cancels; see scripts/check_bench.py)
+# smoke the multi-scene batching, dynamic-session, and sharded-session
+# benchmarks (each asserts exactness between its two paths and
+# merge-accumulates its BENCH_*.json)
 REPRO_BENCH_SMOKE=1 python -m benchmarks.run figbatch
-python scripts/check_bench.py BENCH_batch.json
+REPRO_BENCH_SMOKE=1 python -m benchmarks.run figdyn
+REPRO_BENCH_SMOKE=1 python -m benchmarks.run figshard
+
+# gate: fail if any tracked speedup ratio regressed >10% vs the committed
+# baseline (ratio-gated so machine speed cancels; scripts/check_bench.py)
+python scripts/check_bench.py BENCH_batch.json BENCH_dynamic.json \
+    BENCH_shard.json
 
 # smoke the dynamic-scene session path: the SPH example on the session
-# (and its legacy A/B flag) + the session-vs-rebuild benchmark, so the
-# SimulationSession path cannot silently rot
+# (and its legacy A/B flag), so the SimulationSession path cannot
+# silently rot
 python examples/sph_fluid.py --particles 500 --steps 2
 python examples/sph_fluid.py --particles 500 --steps 2 --rebuild
-REPRO_BENCH_SMOKE=1 python -m benchmarks.run figdyn
 
 echo "ci.sh: OK"

@@ -30,6 +30,8 @@ from .api import (NeighborIndex, QueryPlan, build_index, cached_searcher,
 from .executor import PlanHandle, QueryExecutor
 from .dynamic import (SessionOpts, SimulationSession, StepReport,
                       session_grid_spec)
+from .shards import (ShardOpts, ShardedIndex, ShardedSession, SlabLayout,
+                     plan_layout, shard_scene)
 
 __all__ = [
     "NeighborIndex", "QueryPlan", "build_index", "cached_searcher",
@@ -46,4 +48,6 @@ __all__ = [
     "CostModel", "calibrate", "exhaustive_best", "plan_bundles",
     "NeighborSearch", "neighbor_search", "window_search",
     "window_tile_search",
+    "ShardOpts", "ShardedIndex", "ShardedSession", "SlabLayout",
+    "plan_layout", "shard_scene",
 ]

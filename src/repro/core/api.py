@@ -55,7 +55,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .grid import build_cell_grid, choose_grid_spec, update_cell_grid_traced
+from .grid import (build_cell_grid, choose_grid_spec, parked_mask,
+                   update_cell_grid_traced)
 from .partition import (MegacellStatics, compute_megacells, launch_signatures,
                         megacell_statics, signature_levels)
 from .schedule import schedule_by_level
@@ -72,9 +73,13 @@ class NeighborIndex:
     Spec-static aux (hashable, shared by every scene in a vmap batch):
     ``params``, ``opts``, ``statics``; the ``GridSpec`` rides in the
     ``CellGrid`` subtree's own aux. Leaves: ``points`` [N, 3], the grid
-    arrays, and ``anchor_points`` — the positions the current plan was
+    arrays, ``anchor_points`` — the positions the current plan was
     captured at (the staleness statistic of ``update_index`` is measured
-    against them; ``with_anchor`` re-anchors after a replan).
+    against them; ``with_anchor`` re-anchors after a replan) — and
+    ``origin``, an optional dynamic [3] override of the spec origin: the
+    sharded slabs (``core/shards.py``) share ONE static spec across the
+    mesh while each slab's local frame differs, so the frame must be a
+    leaf, not aux (None = use the static ``spec.origin``).
     """
 
     params: SearchParams
@@ -83,6 +88,7 @@ class NeighborIndex:
     points: Array
     grid: CellGrid
     anchor_points: Array
+    origin: Array | None = None
 
     @property
     def spec(self) -> GridSpec:
@@ -92,15 +98,16 @@ class NeighborIndex:
         return dataclasses.replace(self, anchor_points=anchor_points)
 
     def tree_flatten(self):
-        return ((self.points, self.grid, self.anchor_points),
+        return ((self.points, self.grid, self.anchor_points, self.origin),
                 (self.params, self.opts, self.statics))
 
     @classmethod
     def tree_unflatten(cls, aux, leaves):
         params, opts, statics = aux
-        points, grid, anchor = leaves
+        points, grid, anchor, origin = leaves
         return cls(params=params, opts=opts, statics=statics,
-                   points=points, grid=grid, anchor_points=anchor)
+                   points=points, grid=grid, anchor_points=anchor,
+                   origin=origin)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -141,7 +148,8 @@ class QueryPlan:
 
 def build_index(points, params: SearchParams,
                 opts: SearchOpts = SearchOpts(), *,
-                spec: GridSpec | None = None) -> NeighborIndex:
+                spec: GridSpec | None = None,
+                origin=None) -> NeighborIndex:
     """Build a :class:`NeighborIndex` over ``points`` [N, 3].
 
     Pure and traceable when ``spec`` is given (the grid build is a bin +
@@ -149,6 +157,13 @@ def build_index(points, params: SearchParams,
     the host from the concrete points (``choose_grid_spec``) — that is
     data-dependent host work, so under ``jit``/``vmap`` an explicit spec is
     required (and is what makes a batch of scenes share one trace).
+
+    ``origin`` [3] dynamically overrides ``spec.origin`` for every cell
+    lookup (build, update, and query planning) — the sharded slabs' shared
+    static spec with per-slab frames. With ``opts.mask_parked`` rows parked
+    at the padding sentinel are dropped from the grid entirely instead of
+    binned into the clamped corner cell (which would pollute megacell
+    counts near the grid's high corner).
     """
     if spec is None:
         if isinstance(points, jax.core.Tracer):
@@ -162,10 +177,15 @@ def build_index(points, params: SearchParams,
         spec = choose_grid_spec(np.asarray(points, np.float32),
                                 params.radius)
     points = jnp.asarray(points, jnp.float32)
-    grid = build_cell_grid(points, spec)
+    if origin is not None:
+        origin = jnp.asarray(origin, jnp.float32)
+    valid = jnp.logical_not(parked_mask(points)) if opts.mask_parked \
+        else None
+    grid = build_cell_grid(points, spec, origin, valid)
     statics = megacell_statics(spec.cell_size, params, opts.w_max)
     return NeighborIndex(params=params, opts=opts, statics=statics,
-                         points=points, grid=grid, anchor_points=points)
+                         points=points, grid=grid, anchor_points=points,
+                         origin=origin)
 
 
 def update_index(index: NeighborIndex,
@@ -183,7 +203,8 @@ def update_index(index: NeighborIndex,
     pts = jnp.asarray(new_points, jnp.float32)
     grid, stats, _ccoord = update_cell_grid_traced(
         index.grid, pts, index.anchor_points,
-        use_pallas=index.opts.use_pallas)
+        use_pallas=index.opts.use_pallas, origin=index.origin,
+        mask_parked=index.opts.mask_parked)
     return (dataclasses.replace(index, points=pts, grid=grid), stats)
 
 
@@ -211,10 +232,11 @@ def plan_query(index: NeighborIndex, queries, *,
     partitioned = opts.partition and statics.has_megacells
     ladder = launch_signatures(statics, params, margin=margin,
                                enabled=partitioned, w_ladder=opts.w_ladder)
-    ccoord = spec.cell_of(queries)
+    ccoord = spec.cell_of(queries, index.origin)
     if partitioned:
         w_search, skip, _rho = compute_megacells(index.grid, queries,
-                                                 statics, params)
+                                                 statics, params,
+                                                 index.origin)
         if margin:
             w_search = jnp.minimum(w_search + jnp.int32(margin),
                                    jnp.int32(statics.w_full))
@@ -267,12 +289,13 @@ def execute_plan(index: NeighborIndex, queries,
         from ..kernels.ops import window_search_segmented
         d2t, idxt, cntt = window_search_segmented(
             grid, points, qs, spec, plan.ladder, plan.tile_levels,
-            params.radius, k, tile)
+            params.radius, k, tile, origin=index.origin)
     else:
         def _branch(w, skip):
             def run(qt):
                 return window_tile_search(grid, points, qt, spec, w,
-                                          params.radius, k, skip)
+                                          params.radius, k, skip,
+                                          origin=index.origin)
             return run
 
         branches = [_branch(w, s) for (w, s) in plan.ladder]

@@ -1,266 +1,54 @@
-"""Distributed neighbor search: spatial decomposition + halo exchange.
+"""Distributed neighbor search — thin shim over the sharded-scene
+subsystem (``core/shards.py``, DESIGN.md section 6).
 
-Maps the paper's single-GPU algorithm onto a JAX device mesh
-(DESIGN.md section 6):
+The original implementation in this module routed points and queries on
+the host (``np.digitize`` bucketing + Python scatter loops) on every call
+and ran a bespoke full-window search inside ``shard_map``, bypassing the
+functional core entirely. All of that now lives — traced — in
+``core/shards.py``: on-device slab routing (padded scatter), O(surface)
+halo exchange via ``ppermute`` inside ``shard_map(api.query)``, one shared
+static ``GridSpec`` across slabs, and the traced inverse scatter. This
+module keeps the legacy one-shot convenience surface.
 
-  * ``slab_axis`` ("data"): the domain is cut into equal-width x-slabs, one
-    per mesh row. Each row owns its slab's points; boundary points within
-    ``radius`` of a slab face are exchanged with the two spatial neighbors
-    via ``jax.lax.ppermute`` — O(surface), not O(volume), communication.
-  * ``query_axis`` ("model"): queries routed to a slab are split across the
-    mesh columns (queries are independent — the paper's own observation —
-    so this axis is embarrassingly parallel).
-  * a ``pod`` axis, when present, replicates the structure and splits query
-    batches: pure throughput scaling.
-
-Equal-width slabs keep the per-shard grid spec static (one trace serves all
-shards); per-slab origins are dynamic arrays.
-
-Query routing happens on the host (np.digitize bucketing + padding),
-mirroring the paper's host-side orchestration; results come back in the
-original query order with *global* point indices.
+Version compatibility (shard_map location, ``check_rep``/``check_vma``)
+is feature-detected in ``shards.py``; ``_shard_map``/``_SHARD_MAP_KW``
+are re-exported here for callers that historically imported them from
+this module.
 """
 from __future__ import annotations
 
 import dataclasses
-import math
-from functools import partial
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
-# jax >= 0.5 promotes shard_map to jax.shard_map and renames the replication
-# check kwarg check_rep -> check_vma; this repo must run on both.
-if hasattr(jax, "shard_map"):
-    _shard_map = jax.shard_map
-    _SHARD_MAP_KW = {"check_vma": False}
-else:
-    from jax.experimental.shard_map import shard_map as _shard_map
-    _SHARD_MAP_KW = {"check_rep": False}
-
-from .grid import build_cell_grid
-from .search import window_search
-from .types import GridSpec, SearchParams, SearchResult
-
-_SENTINEL = 1e30  # parks padded points/queries far outside any slab
-
-
-@dataclasses.dataclass
-class SlabPlan:
-    """Host-side layout of the spatial decomposition."""
-
-    n_slabs: int
-    n_qsplit: int
-    lo_x: float
-    slab_width: float
-    point_cap: int          # max points per slab (incl. padding)
-    halo_cap: int           # max boundary points exchanged per side
-    query_cap: int          # max queries per (slab, qsplit) cell
-    spec: GridSpec          # local grid spec (shared; origin is per-slab)
-
-
-def plan_slabs(points: np.ndarray, queries: np.ndarray, radius: float,
-               n_slabs: int, n_qsplit: int,
-               cell_size: float | None = None) -> SlabPlan:
-    points = np.asarray(points, np.float32)
-    queries = np.asarray(queries, np.float32)
-    lo, hi = points[:, 0].min(), points[:, 0].max()
-    width = max((hi - lo) / n_slabs, 1e-6)
-    cell = cell_size or max(radius, 1e-6)
-
-    slab_of_p = np.clip(((points[:, 0] - lo) / width).astype(int), 0,
-                        n_slabs - 1)
-    slab_of_q = np.clip(((queries[:, 0] - lo) / width).astype(int), 0,
-                        n_slabs - 1)
-    p_cnt = np.bincount(slab_of_p, minlength=n_slabs)
-    q_cnt = np.bincount(slab_of_q, minlength=n_slabs)
-
-    # halo capacity: points within radius of either face of their slab
-    rel = points[:, 0] - (lo + slab_of_p * width)
-    boundary = (rel <= radius) | (rel >= width - radius)
-    h_cnt = np.bincount(slab_of_p[boundary], minlength=n_slabs)
-
-    # local grid: slab + halo margins, same static dims for every slab
-    yz_lo = points[:, 1:].min(axis=0)
-    yz_hi = points[:, 1:].max(axis=0)
-    dims = (
-        int(math.ceil((width + 2 * radius) / cell)) + 3,
-        int(math.ceil(max(yz_hi[0] - yz_lo[0], 1e-6) / cell)) + 3,
-        int(math.ceil(max(yz_hi[1] - yz_lo[1], 1e-6) / cell)) + 3,
-    )
-    # capacity: worst-case cell occupancy across the whole domain is a safe
-    # (over-)estimate for every local grid
-    gc = np.floor((points - np.concatenate([[lo - radius - cell],
-                                            yz_lo - cell])) / cell)
-    gc = gc.astype(np.int64)
-    flat = (gc[:, 0] * (dims[1] + 64) + gc[:, 1]) * (dims[2] + 64) + gc[:, 2]
-    _, occ = np.unique(flat, return_counts=True)
-    cap = int(occ.max())
-
-    qcap = int(np.ceil(q_cnt.max() / n_qsplit)) if len(q_cnt) else 1
-    return SlabPlan(
-        n_slabs=n_slabs,
-        n_qsplit=n_qsplit,
-        lo_x=float(lo),
-        slab_width=float(width),
-        point_cap=int(p_cnt.max()),
-        halo_cap=int(max(h_cnt.max(), 1)),
-        query_cap=max(qcap, 1),
-        spec=GridSpec(origin=(0.0, 0.0, 0.0), cell_size=float(cell),
-                      dims=dims, capacity=max(cap, 1)),
-    )
-
-
-def _route(plan: SlabPlan, points: np.ndarray, queries: np.ndarray):
-    """Host-side bucketing into fixed-capacity per-shard arrays."""
-    n, q = points.shape[0], queries.shape[0]
-    slab_of_p = np.clip(((points[:, 0] - plan.lo_x) / plan.slab_width)
-                        .astype(int), 0, plan.n_slabs - 1)
-    slab_of_q = np.clip(((queries[:, 0] - plan.lo_x) / plan.slab_width)
-                        .astype(int), 0, plan.n_slabs - 1)
-
-    pts = np.full((plan.n_slabs, plan.point_cap, 3), _SENTINEL, np.float32)
-    ids = np.full((plan.n_slabs, plan.point_cap), -1, np.int32)
-    for s in range(plan.n_slabs):
-        sel = np.where(slab_of_p == s)[0]
-        pts[s, : len(sel)] = points[sel]
-        ids[s, : len(sel)] = sel
-
-    qs = np.full((plan.n_slabs, plan.n_qsplit, plan.query_cap, 3),
-                 _SENTINEL, np.float32)
-    qid = np.full((plan.n_slabs, plan.n_qsplit, plan.query_cap), -1, np.int32)
-    for s in range(plan.n_slabs):
-        sel = np.where(slab_of_q == s)[0]
-        parts = np.array_split(sel, plan.n_qsplit)
-        for c, pp in enumerate(parts):
-            qs[s, c, : len(pp)] = queries[pp]
-            qid[s, c, : len(pp)] = pp
-    return pts, ids, qs, qid
-
-
-def _halo_select(pts, ids, face_dist, radius: float, cap: int):
-    """Pick up to ``cap`` points within ``radius`` of a slab face
-    (static-shape: order by boundary-ness, take first cap)."""
-    is_b = (face_dist <= radius) & (ids >= 0)
-    order = jnp.argsort(jnp.where(is_b, 0, 1), stable=True)[:cap]
-    sel_p = pts[order]
-    sel_i = ids[order]
-    valid = is_b[order]
-    sel_p = jnp.where(valid[:, None], sel_p, _SENTINEL)
-    sel_i = jnp.where(valid, sel_i, -1)
-    return sel_p, sel_i
-
-
-def make_distributed_search(mesh: Mesh, plan: SlabPlan,
-                            params: SearchParams,
-                            slab_axis: str = "data",
-                            query_axis: str = "model",
-                            tile: int = 128):
-    """Build the jitted shard_map search over ``mesh``.
-
-    Returned fn: (pts [S,P,3], ids [S,P], qs [S,C,Q,3]) ->
-    (idx [S,C,Q,K] global ids, d2, counts). Extra leading mesh axes (e.g.
-    "pod") must already be folded into the inputs by the caller.
-    """
-    spec = plan.spec
-    n_slabs = plan.n_slabs
-    radius, k = params.radius, params.k
-    w_full = max(1, int(math.ceil(radius / spec.cell_size - 1e-6)))
-
-    def local_fn(pts, ids, qs):
-        pts, ids, qs = pts[0], ids[0], qs[0, 0]       # shard-local views
-        sidx = jax.lax.axis_index(slab_axis)
-        origin_x = plan.lo_x + sidx * plan.slab_width - radius \
-            - spec.cell_size
-        origin = jnp.stack([
-            origin_x,
-            jnp.float32(spec.origin[1]),
-            jnp.float32(spec.origin[2]),
-        ])
-
-        # --- halo exchange (left and right spatial neighbors) -------------
-        slab_lo = plan.lo_x + sidx * plan.slab_width
-        slab_hi = slab_lo + plan.slab_width
-        send_l_p, send_l_i = _halo_select(
-            pts, ids, pts[:, 0] - slab_lo, radius, plan.halo_cap)
-        send_r_p, send_r_i = _halo_select(
-            pts, ids, slab_hi - pts[:, 0], radius, plan.halo_cap)
-        # ids are shifted +1 so a zero-filled (edge) permute decodes to -1
-        pack = lambda p, i: jnp.concatenate(
-            [p, (i + 1)[:, None].astype(jnp.float32)], axis=1)
-        right_perm = [(i, i + 1) for i in range(n_slabs - 1)]
-        left_perm = [(i + 1, i) for i in range(n_slabs - 1)]
-        from_left = jax.lax.ppermute(pack(send_r_p, send_r_i), slab_axis,
-                                     right_perm)
-        from_right = jax.lax.ppermute(pack(send_l_p, send_l_i), slab_axis,
-                                      left_perm)
-
-        def unpack(buf):
-            i = buf[:, 3].astype(jnp.int32) - 1
-            p = jnp.where((i >= 0)[:, None], buf[:, :3], _SENTINEL)
-            return p, i
-
-        halo_l_p, halo_l_i = unpack(from_left)
-        halo_r_p, halo_r_i = unpack(from_right)
-
-        all_p = jnp.concatenate([pts, halo_l_p, halo_r_p], axis=0)
-        all_i = jnp.concatenate([ids, halo_l_i, halo_r_i], axis=0)
-
-        # --- local structure build + search ------------------------------
-        # positions stay in the GLOBAL frame (bit-identical distances to the
-        # single-device oracle); only the cell lookup uses the dynamic
-        # per-slab origin. Invalid points are parked far away so they land
-        # in the clamped corner cell with sentinel distances.
-        safe_p = jnp.where((all_i >= 0)[:, None], all_p, _SENTINEL)
-        grid = build_cell_grid(safe_p, spec, origin)
-        idx, d2, cnt = window_search(
-            grid, safe_p, qs, spec, w_full, radius, k, False, tile,
-            origin=origin)
-        # local row -> global point id; sentinel-padded rows never match
-        gidx = jnp.where(idx >= 0, all_i[jnp.clip(idx, 0)], -1)
-        # a halo row could be a duplicate of a pad slot: drop id -1 hits
-        d2 = jnp.where(gidx >= 0, d2, jnp.inf)
-        cnt = jnp.sum((gidx >= 0).astype(jnp.int32), axis=-1)
-        return gidx[None, None], d2[None, None], cnt[None, None]
-
-    in_specs = (P(slab_axis, None, None), P(slab_axis, None),
-                P(slab_axis, query_axis, None, None))
-    out_specs = (P(slab_axis, query_axis, None, None),
-                 P(slab_axis, query_axis, None, None),
-                 P(slab_axis, query_axis, None))
-    fn = _shard_map(local_fn, mesh=mesh, in_specs=in_specs,
-                    out_specs=out_specs, **_SHARD_MAP_KW)
-    return jax.jit(fn)
+from .shards import (_SHARD_MAP_KW, _shard_map,  # noqa: F401 (re-export)
+                     STATIC_SCENE_OPTS, shard_scene)
+from .types import SearchOpts, SearchParams, SearchResult
 
 
 def distributed_neighbor_search(mesh: Mesh, points, queries,
                                 params: SearchParams,
                                 slab_axis: str = "data",
                                 query_axis: str = "model",
-                                cell_size: float | None = None
+                                cell_size: float | None = None,
+                                opts: SearchOpts = SearchOpts()
                                 ) -> SearchResult:
-    """One-shot convenience API: plan, route, search, un-route."""
-    points = np.asarray(points, np.float32)
-    queries = np.asarray(queries, np.float32)
-    n_slabs = mesh.shape[slab_axis]
-    n_qsplit = mesh.shape[query_axis]
-    plan = plan_slabs(points, queries, params.radius, n_slabs, n_qsplit,
-                      cell_size)
-    pts, ids, qs, qid = _route(plan, points, queries)
-    fn = make_distributed_search(mesh, plan, params, slab_axis, query_axis)
-    idx, d2, cnt = jax.device_get(fn(jnp.asarray(pts), jnp.asarray(ids),
-                                     jnp.asarray(qs)))
-    nq, k = queries.shape[0], params.k
-    out_i = np.full((nq, k), -1, np.int32)
-    out_d = np.full((nq, k), np.inf, np.float32)
-    out_c = np.zeros((nq,), np.int32)
-    flat_qid = qid.reshape(-1)
-    valid = flat_qid >= 0
-    out_i[flat_qid[valid]] = idx.reshape(-1, k)[valid]
-    out_d[flat_qid[valid]] = d2.reshape(-1, k)[valid]
-    out_c[flat_qid[valid]] = cnt.reshape(-1)[valid]
-    return SearchResult(indices=jnp.asarray(out_i),
-                        distances2=jnp.asarray(out_d),
-                        counts=jnp.asarray(out_c))
+    """One-shot sharded search: plan, route, search, un-route.
+
+    Results come back in query order with *global* point indices, exactly
+    as before — but routing and un-routing are now traced device scatters
+    and the per-slab search is ``api.query`` over the slab's functional
+    ``NeighborIndex`` (megacell partitioning and the Pallas path compose).
+
+    KNN keeps this surface's historical exactness contract: the
+    approximate-by-design heuristic window is upgraded to the paper's
+    conservative exact window (the legacy implementation always searched
+    the full-radius window, so it was exact regardless of ``knn_window``).
+    """
+    if params.mode == "knn" and params.knn_window != "exact":
+        params = dataclasses.replace(params, knn_window="exact")
+    index = shard_scene(points, params, mesh=mesh, opts=opts,
+                        shopts=STATIC_SCENE_OPTS, queries=queries,
+                        cell_size=cell_size, slab_axis=slab_axis,
+                        query_axis=query_axis)
+    return index.query(queries)

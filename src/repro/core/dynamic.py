@@ -100,6 +100,19 @@ class SessionOpts:
                            long-lived adversarial session. Past the cap
                            the respec cadence degrades gracefully from
                            O(log frames) back to O(frames / cap).
+    ``donate_grid``        alias-safe grid-only donation of the fused step:
+                           the dense-grid leaves of the index (always
+                           session-owned — built fresh by build/update,
+                           never aliasing caller arrays) are donated to the
+                           step program so XLA updates the dense array in
+                           place, while the points/anchor leaves — which CAN
+                           alias caller-owned device buffers — are left
+                           alone. None = auto (on everywhere except the CPU
+                           backend, which ignores donation and would warn).
+                           After a step the PREVIOUS index's grid buffers
+                           are consumed: callers holding ``sess.index``
+                           across steps on non-CPU backends should re-read
+                           the property.
     """
 
     displacement_frac: float = 0.45
@@ -110,6 +123,7 @@ class SessionOpts:
     auto_respec: bool = True
     respec_growth: float = 2.0
     respec_boost_max: float = 64.0
+    donate_grid: bool | None = None
 
 
 @dataclasses.dataclass
@@ -131,6 +145,22 @@ class StepReport:
     max_disp: float = 0.0      # fetched only on the respec/raise path
     overflow: int = 0
     oob: int = 0
+
+
+def validate_session_opts(sopts: SessionOpts) -> None:
+    """The staleness-contract invariant shared by every session surface
+    (`SimulationSession`, `core/shards.ShardedSession`): each of the query
+    and its candidates may shift ceil(frac) cells before a replan, so the
+    baked-in window margin must cover both or plan reuse silently loses
+    exactness."""
+    if sopts.displacement_frac <= 0.0:
+        raise ValueError("displacement_frac must be > 0")
+    need = 2 * math.ceil(sopts.displacement_frac)
+    if sopts.reuse_margin_cells < need:
+        raise ValueError(
+            f"reuse_margin_cells={sopts.reuse_margin_cells} cannot keep "
+            f"reused plans exact at displacement_frac="
+            f"{sopts.displacement_frac} (needs >= {need})")
 
 
 def session_grid_spec(points: np.ndarray, radius: float,
@@ -161,9 +191,9 @@ _FLAG_REPLANNED = 1     # staleness cond took the replan branch
 _FLAG_EXHAUSTED = 2     # overflow/oob: frozen spec can no longer bin exactly
 
 
-def _step_impl(index: api.NeighborIndex, plan, pts: Array, q: Array,
-               anchor_q: Array, *, thr2: float, margin: int, force: bool,
-               self_query: bool):
+def _step_impl(grid, index_rest: api.NeighborIndex, plan, pts: Array,
+               q: Array, anchor_q: Array, *, thr2: float, margin: int,
+               force: bool, self_query: bool):
     """update_index -> lax.cond(stale, replan, replay) -> execute_plan.
 
     Everything device-resident: the staleness statistic (max displacement
@@ -172,7 +202,14 @@ def _step_impl(index: api.NeighborIndex, plan, pts: Array, q: Array,
     replayed :class:`~.api.QueryPlan` flow into the same compiled search.
     ``force`` (static) is the plan-capture variant: first step, shape or
     query-set changes, and the post-respec re-execution.
+
+    The index arrives SPLIT: ``grid`` (argument 0) carries the dense-grid
+    leaves so they can be donated on their own — they are session-owned by
+    construction, unlike ``index_rest``'s points/anchor leaves, which can
+    alias caller buffers (and, after a replan, each other) and must never
+    be donated.
     """
+    index = dataclasses.replace(index_rest, grid=grid)
     index2, stats = api.update_index(index, pts)
     bad = (stats.overflow > 0) | (stats.oob > 0)
     disp2 = stats.max_disp2
@@ -202,12 +239,15 @@ def _step_impl(index: api.NeighborIndex, plan, pts: Array, q: Array,
     return index3, plan2, anchor_q2, res, flags, stats
 
 
-# NOTE: the step deliberately does NOT donate the index argument. Its
-# points/anchor_points leaves can alias caller-owned arrays (build_index
-# keeps the caller's device buffer), and after a replan both leaves can be
-# the SAME buffer — donation would invalidate caller arrays off-CPU and
-# trip duplicate-donation. Re-introducing grid-only donation needs
-# alias-safe plumbing (ROADMAP).
+# NOTE: the step donates ONLY the grid argument (argument 0, the dense-grid
+# leaves split out of the index). The points/anchor_points leaves can alias
+# caller-owned arrays (build_index keeps the caller's device buffer), and
+# after a replan both leaves can be the SAME buffer — donating them would
+# invalidate caller arrays off-CPU and trip duplicate-donation. The grid
+# leaves, by contrast, are always freshly built by build_cell_grid /
+# update_cell_grid and owned by the session, so their donation is
+# alias-safe (SessionOpts.donate_grid; auto-disabled on the CPU backend,
+# which ignores donation).
 _STEP_STATICS = ("thr2", "margin", "force", "self_query")
 
 
@@ -235,18 +275,7 @@ class SimulationSession:
         sopts: SessionOpts = SessionOpts(),
         spec: GridSpec | None = None,
     ):
-        # the staleness contract (inflate_plan_inputs): each of the query
-        # and its candidates may shift ceil(frac) cells before a replan, so
-        # the baked-in window margin must cover both or reuse loses
-        # exactness silently
-        if sopts.displacement_frac <= 0.0:
-            raise ValueError("displacement_frac must be > 0")
-        need = 2 * math.ceil(sopts.displacement_frac)
-        if sopts.reuse_margin_cells < need:
-            raise ValueError(
-                f"reuse_margin_cells={sopts.reuse_margin_cells} cannot keep "
-                f"reused plans exact at displacement_frac="
-                f"{sopts.displacement_frac} (needs >= {need})")
+        validate_session_opts(sopts)
         self.sopts = sopts
         pts = jnp.asarray(points, jnp.float32)
         spec = spec or session_grid_spec(
@@ -254,10 +283,14 @@ class SimulationSession:
         self._index = api.build_index(pts, params, opts, spec=spec)
         self._plan: api.QueryPlan | None = None
         self._anchor_queries: Array | None = None
+        donate = sopts.donate_grid
+        if donate is None:
+            donate = jax.default_backend() != "cpu"
         # per-session jit so a respec can release the step variants
         # compiled against the old spec (and session teardown frees them
         # all) instead of pinning them in a module-global cache forever
-        self._step_fn = jax.jit(_step_impl, static_argnames=_STEP_STATICS)
+        self._step_fn = jax.jit(_step_impl, static_argnames=_STEP_STATICS,
+                                donate_argnums=(0,) if donate else ())
         self._counters = collections.Counter()
         self.report = StepReport()
 
@@ -291,8 +324,11 @@ class SimulationSession:
     def _dispatch(self, index, pts, q, anchor_q, force, self_query):
         thr2 = float((self.sopts.displacement_frac *
                       index.spec.cell_size) ** 2)
+        # grid split out as its own (donatable) argument; the rest of the
+        # index rides with grid=None (an empty pytree slot)
         return self._step_fn(
-            index, None if force else self._plan, pts, q, anchor_q,
+            index.grid, dataclasses.replace(index, grid=None),
+            None if force else self._plan, pts, q, anchor_q,
             thr2=thr2, margin=int(self.sopts.reuse_margin_cells),
             force=bool(force), self_query=bool(self_query))
 

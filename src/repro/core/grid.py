@@ -14,7 +14,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .types import Array, CellGrid, GridSpec, UpdateStats
+from .types import (PARK_THRESHOLD, Array, CellGrid, GridSpec, UpdateStats)
+
+
+def parked_mask(points: Array) -> Array:
+    """Rows parked at the slab-padding sentinel (``types.PARK_SENTINEL``):
+    any coordinate with magnitude >= ``PARK_THRESHOLD`` marks the row as an
+    empty fixed-capacity slot, not a point (core/shards.py)."""
+    return jnp.any(jnp.abs(points) >= jnp.float32(PARK_THRESHOLD), axis=-1)
 
 
 def choose_grid_spec(
@@ -71,17 +78,24 @@ def choose_grid_spec(
 
 @partial(jax.jit, static_argnames=("spec",))
 def build_cell_grid(points: Array, spec: GridSpec,
-                    origin: Array | None = None) -> CellGrid:
+                    origin: Array | None = None,
+                    valid: Array | None = None) -> CellGrid:
     """Bin ``points`` [N, 3] into the dense fixed-capacity cell list.
 
     Deterministic scatter: points are ranked within their cell by a stable
     sort over flat cell id, so the slot of each point is its rank among
     same-cell points in input order. Points beyond ``capacity`` are dropped
     and counted in ``overflow``. ``origin`` optionally overrides the static
-    spec origin (distributed slabs).
+    spec origin (distributed slabs). ``valid`` [N] optionally drops rows
+    from the grid entirely — parked padding slots of the sharded slabs must
+    not pollute cell counts/SAT (they would inflate megacell occupancy and
+    shrink windows below exactness).
     """
     ccoord = spec.cell_of(points, origin)
-    return _grid_from_flat(spec.flat_cell(ccoord), points.shape[0], spec)
+    flat = spec.flat_cell(ccoord)
+    if valid is not None:
+        flat = jnp.where(valid, flat, spec.num_cells)   # scatter-dropped
+    return _grid_from_flat(flat, points.shape[0], spec)
 
 
 def _grid_from_flat(flat: Array, n: int, spec: GridSpec) -> CellGrid:
@@ -106,7 +120,10 @@ def _grid_from_flat(flat: Array, n: int, spec: GridSpec) -> CellGrid:
         .reshape(dx * dy * dz, spec.capacity)
     )
 
-    counts_full = jnp.zeros((dx * dy * dz,), jnp.int32).at[flat].add(1)
+    # mode="drop": rows routed to the out-of-range id num_cells (invalid /
+    # parked slots) contribute to no cell
+    counts_full = jnp.zeros((dx * dy * dz,), jnp.int32).at[flat].add(
+        1, mode="drop")
     counts = jnp.minimum(counts_full, spec.capacity).reshape(dx, dy, dz)
     overflow = jnp.sum(counts_full - jnp.minimum(counts_full, spec.capacity))
 
@@ -124,8 +141,10 @@ def _grid_from_flat(flat: Array, n: int, spec: GridSpec) -> CellGrid:
 # dynamic-scene incremental update (core/dynamic.py; DESIGN.md section 7)
 # ---------------------------------------------------------------------------
 
-def _bin_and_stats(spec: GridSpec, points: Array,
-                   anchor_points: Array) -> tuple[Array, Array, Array]:
+def _bin_and_stats(spec: GridSpec, points: Array, anchor_points: Array,
+                   origin: Array | None = None,
+                   valid: Array | None = None
+                   ) -> tuple[Array, Array, Array]:
     """Unclamped binning + motion statistics (jnp path).
 
     Returns (ccoord [N,3] clipped, oob, max_disp2): ``oob`` counts points
@@ -133,34 +152,54 @@ def _bin_and_stats(spec: GridSpec, points: Array,
     them into a wrong border cell, losing exactness — the session respecs
     instead), ``max_disp2`` is the max squared displacement vs the positions
     the current plan was captured at (the temporal-coherence statistic).
+    ``origin`` overrides the static spec origin (sharded slabs); ``valid``
+    [N] excludes parked padding rows from both statistics (a parked slot is
+    not out of bounds, and a parked→parked row contributes 0 displacement —
+    while a row whose occupant changed blows the statistic up, which is the
+    conservative replan trigger the sharded session relies on).
     """
-    o = jnp.asarray(spec.origin, points.dtype)
+    o = (jnp.asarray(spec.origin, points.dtype) if origin is None
+         else origin.astype(points.dtype))
     c = jnp.floor((points - o) / spec.cell_size).astype(jnp.int32)
     hi = jnp.asarray([d - 1 for d in spec.dims], jnp.int32)
-    oob = jnp.sum(jnp.any((c < 0) | (c > hi), axis=-1).astype(jnp.int32))
-    max_d2 = jnp.max(jnp.sum((points - anchor_points) ** 2, axis=-1))
-    return jnp.clip(c, 0, hi), oob, max_d2
+    escaped = jnp.any((c < 0) | (c > hi), axis=-1)
+    d2 = jnp.sum((points - anchor_points) ** 2, axis=-1)
+    if valid is not None:
+        escaped = escaped & valid
+        d2 = jnp.where(valid, d2, 0.0)
+    oob = jnp.sum(escaped.astype(jnp.int32))
+    return jnp.clip(c, 0, hi), oob, jnp.max(d2)
 
 
 def _update_impl(grid: CellGrid, points: Array, anchor_points: Array,
-                 use_pallas: bool):
+                 use_pallas: bool, origin: Array | None = None,
+                 mask_parked: bool = False):
     spec = grid.spec
+    valid = jnp.logical_not(parked_mask(points)) if mask_parked else None
     if use_pallas:
         from ..kernels.ops import INTERPRET
         from ..kernels.update_tile import bin_disp_tile
         ccoord, oob, max_d2 = bin_disp_tile(points, anchor_points, spec,
+                                            origin=origin,
+                                            mask_parked=mask_parked,
                                             interpret=INTERPRET)
     else:
-        ccoord, oob, max_d2 = _bin_and_stats(spec, points, anchor_points)
-    new = _grid_from_flat(spec.flat_cell(ccoord), points.shape[0], spec)
+        ccoord, oob, max_d2 = _bin_and_stats(spec, points, anchor_points,
+                                             origin, valid)
+    flat = spec.flat_cell(ccoord)
+    if valid is not None:
+        flat = jnp.where(valid, flat, spec.num_cells)
+    new = _grid_from_flat(flat, points.shape[0], spec)
     stats = UpdateStats(overflow=new.overflow, oob=oob, max_disp2=max_d2)
     return new, stats, ccoord
 
 
-_update_donated = partial(jax.jit, static_argnames=("use_pallas",),
+_update_donated = partial(jax.jit,
+                          static_argnames=("use_pallas", "mask_parked"),
                           donate_argnums=(0,))(_update_impl)
 _update_plain = partial(jax.jit,
-                        static_argnames=("use_pallas",))(_update_impl)
+                        static_argnames=("use_pallas", "mask_parked"))(
+                            _update_impl)
 
 
 def update_cell_grid(
@@ -170,6 +209,8 @@ def update_cell_grid(
     *,
     use_pallas: bool = False,
     donate: bool | None = None,
+    origin: Array | None = None,
+    mask_parked: bool = False,
 ) -> tuple[CellGrid, UpdateStats, Array]:
     """Re-bin moved ``points`` into the *frozen* spec of ``grid``.
 
@@ -187,7 +228,8 @@ def update_cell_grid(
     if donate is None:
         donate = jax.default_backend() != "cpu"
     fn = _update_donated if donate else _update_plain
-    return fn(grid, points, anchor_points, use_pallas=use_pallas)
+    return fn(grid, points, anchor_points, use_pallas, origin,
+              mask_parked=mask_parked)
 
 
 def update_cell_grid_traced(
@@ -196,13 +238,16 @@ def update_cell_grid_traced(
     anchor_points: Array,
     *,
     use_pallas: bool = False,
+    origin: Array | None = None,
+    mask_parked: bool = False,
 ) -> tuple[CellGrid, UpdateStats, Array]:
     """Un-jitted core of :func:`update_cell_grid`, for composition inside
     larger traced programs: the functional core's ``update_index``
     (``core/api.py``) and the session's fused ``lax.cond`` step
     (``core/dynamic.py``) inline it into their own jitted bodies, where a
     nested donating jit would be meaningless."""
-    return _update_impl(grid, points, anchor_points, use_pallas)
+    return _update_impl(grid, points, anchor_points, use_pallas, origin,
+                        mask_parked)
 
 
 def _summed_area_table(counts: Array) -> Array:

@@ -96,16 +96,19 @@ def compute_megacells(
     queries: Array,
     statics: MegacellStatics,
     params: SearchParams,
+    origin: Array | None = None,
 ) -> tuple[Array, Array, Array]:
     """Vectorized megacell growth.
 
     Returns per-query ``(w_search, skip_test, rho)`` where ``rho`` is the
     paper's density estimate K/C^3 used by the bundling cost model
-    (section 5.2), with C the megacell width.
+    (section 5.2), with C the megacell width. ``origin`` overrides the
+    static spec origin for the cell lookup (sharded slabs, whose local
+    frames differ per shard while the spec is shared).
     """
     nq = queries.shape[0]
     spec = grid.spec
-    ccoord = spec.cell_of(queries)
+    ccoord = spec.cell_of(queries, origin)
 
     if not statics.has_megacells:
         w_search = jnp.full((nq,), statics.w_full, jnp.int32)

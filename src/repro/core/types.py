@@ -16,6 +16,14 @@ import jax.numpy as jnp
 
 Array = jax.Array
 
+# Padding convention of the sharded slabs (core/shards.py): rows "parked" at
+# PARK_SENTINEL are empty slots of a fixed-capacity buffer. Any position with
+# a coordinate magnitude >= PARK_THRESHOLD is treated as parked by the
+# functional core when ``SearchOpts.mask_parked`` is set: dropped from the
+# grid entirely and excluded from the update statistics.
+PARK_SENTINEL = 1e30
+PARK_THRESHOLD = 1e29
+
 
 @dataclasses.dataclass(frozen=True)
 class GridSpec:
@@ -165,3 +173,7 @@ class SearchOpts:
     #                                    None derives the ladder from the
     #                                    megacell statics. Bounds the traced
     #                                    lax.switch branch count.
+    mask_parked: bool = False          # rows parked at PARK_SENTINEL (fixed-
+    #                                    capacity slab padding, core/shards.py)
+    #                                    are absent: dropped from the grid and
+    #                                    excluded from oob/displacement stats

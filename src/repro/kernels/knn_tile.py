@@ -40,10 +40,20 @@ The merge uses K-pass extraction over [TQ, K + TM] with a one-hot argmin
 current K-th best — the TPU analogue of the paper's AH-shader early ray
 termination.
 
-Deployment notes: on real TPU, K should be padded to a multiple of the lane
-width for the output block (the wrapper keeps logical K and slices), and a
-points table larger than VMEM must be sharded or kept in ANY/HBM with
-manual DMA; on this container the kernels run in interpret mode.
+Lane-width discipline: every block whose minor dimension is K (the output
+and best-K scratch blocks) is padded to a multiple of the 128-lane register
+width, and the candidate-chunk width TM is rounded to a lane multiple, so
+arbitrary K values (k=8, k=5, ...) lower cleanly on real TPU instead of
+tripping Mosaic's tiling constraints. The wrappers keep the *logical* K:
+pad columns ride as the _BIG/-1 neutral element through the merge (the
+K-pass extraction only ever writes the first K columns) and are sliced off
+before returning, so padded and unpadded results are bit-identical — the
+same code path runs in interpret mode on CPU CI. The query-tile sublane
+dimension TQ must be a multiple of 8 (asserted).
+
+Deployment notes: a points table larger than VMEM must be sharded or kept
+in ANY/HBM with manual DMA; on this container the kernels run in interpret
+mode.
 """
 from __future__ import annotations
 
@@ -57,8 +67,15 @@ from jax.experimental.pallas import tpu as pltpu
 DEFAULT_TQ = 256
 DEFAULT_TM = 512
 COORD_PAD = 8
+LANE = 128               # TPU register lane width (minor-dim tile multiple)
+SUBLANE = 8              # f32 sublane multiple (second-to-minor dim)
 _BIG = 3.4e38            # sentinel "invalid/evicted" distance (plain float:
 _NEG_I32 = -(2**31) + 1  # jnp scalars here would be captured tracer consts)
+
+
+def _pad_lane(n: int) -> int:
+    """Round ``n`` up to the 128-lane register width multiple."""
+    return ((int(n) + LANE - 1) // LANE) * LANE
 
 
 def _merge_topk(best_d2, best_idx, d2, idx, k: int):
@@ -112,7 +129,9 @@ def _stream_candidates(q, pts, idx, best_d2, best_idx, *, k: int, r2: float,
     idx_b = jnp.where(invalid, -1, jnp.broadcast_to(idx[None, :], d2.shape))
 
     # threshold guard: does any candidate beat any row's current K-th best?
-    row_kth = jnp.max(best_d2[...], axis=1)               # [TQ]
+    # (only the first k columns are live — the lane-pad columns stay _BIG
+    # forever and would otherwise pin the guard open)
+    row_kth = jnp.max(best_d2[...][:, :k], axis=1)        # [TQ]
     row_min = jnp.min(d2, axis=1)                         # [TQ]
     beats = jnp.any(row_min < row_kth)
 
@@ -168,6 +187,9 @@ def knn_tile(
     """
     n_tiles, m = wnd_idx.shape
     assert q.shape[0] == n_tiles * tq, (q.shape, n_tiles, tq)
+    assert tq % SUBLANE == 0, f"query tile {tq} must be a multiple of 8"
+    tm = _pad_lane(tm)
+    kp = _pad_lane(k)        # block minor dim; logical K sliced off below
     n_pts = points.shape[0]
     m_pad = (-m) % tm
     wnd_idx = jnp.pad(wnd_idx, ((0, 0), (0, m_pad)), constant_values=-1)
@@ -195,20 +217,20 @@ def knn_tile(
             pl.BlockSpec((1, tm), lambda i, j: (i, j)),
         ],
         out_specs=[
-            pl.BlockSpec((tq, k), lambda i, j: (i, 0)),
-            pl.BlockSpec((tq, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((tq, kp), lambda i, j: (i, 0)),
+            pl.BlockSpec((tq, kp), lambda i, j: (i, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((n_tiles * tq, k), jnp.float32),
-            jax.ShapeDtypeStruct((n_tiles * tq, k), jnp.int32),
+            jax.ShapeDtypeStruct((n_tiles * tq, kp), jnp.float32),
+            jax.ShapeDtypeStruct((n_tiles * tq, kp), jnp.int32),
         ],
         scratch_shapes=[
-            pltpu.VMEM((tq, k), jnp.float32),
-            pltpu.VMEM((tq, k), jnp.int32),
+            pltpu.VMEM((tq, kp), jnp.float32),
+            pltpu.VMEM((tq, kp), jnp.int32),
         ],
         interpret=interpret,
     )(qp, pts8, wnd_idx)
-    return out_d2, out_idx
+    return out_d2[:, :k], out_idx[:, :k]
 
 
 def _knn_anchored_kernel(anchors_ref, levels_ref, q_ref, pts_ref, dense_ref,
@@ -298,9 +320,13 @@ def knn_tile_anchored(
     """
     n_tiles = anchors.shape[0]
     assert q.shape[0] == n_tiles * tq, (q.shape, n_tiles, tq)
+    assert tq % SUBLANE == 0, f"query tile {tq} must be a multiple of 8"
     n_pts = points.shape[0]
     m = ws[0] * ws[1] * ws[2] * cap
-    tm = min(tm, max(8, m))
+    # candidate-chunk width: lane-multiple so the in-kernel iota/gather
+    # vectors tile cleanly; the c < m mask already handles the tail
+    tm = _pad_lane(min(tm, max(1, m)))
+    kp = _pad_lane(k)        # block minor dim; logical K sliced off below
     n_m = (m + tm - 1) // tm
     n_row_pad = (-n_pts) % 8
     pts8 = jnp.pad(points.astype(jnp.float32),
@@ -325,22 +351,22 @@ def knn_tile_anchored(
             pl.BlockSpec((n_flat,), lambda i, j, a, l: (0,)),
         ],
         out_specs=[
-            pl.BlockSpec((tq, k), lambda i, j, a, l: (i, 0)),
-            pl.BlockSpec((tq, k), lambda i, j, a, l: (i, 0)),
+            pl.BlockSpec((tq, kp), lambda i, j, a, l: (i, 0)),
+            pl.BlockSpec((tq, kp), lambda i, j, a, l: (i, 0)),
         ],
         scratch_shapes=[
-            pltpu.VMEM((tq, k), jnp.float32),
-            pltpu.VMEM((tq, k), jnp.int32),
+            pltpu.VMEM((tq, kp), jnp.float32),
+            pltpu.VMEM((tq, kp), jnp.int32),
         ],
     )
     out_d2, out_idx = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=[
-            jax.ShapeDtypeStruct((n_tiles * tq, k), jnp.float32),
-            jax.ShapeDtypeStruct((n_tiles * tq, k), jnp.int32),
+            jax.ShapeDtypeStruct((n_tiles * tq, kp), jnp.float32),
+            jax.ShapeDtypeStruct((n_tiles * tq, kp), jnp.int32),
         ],
         interpret=interpret,
     )(anchors.astype(jnp.int32), levels.astype(jnp.int32), qp, pts8,
       dense_flat)
-    return out_d2, out_idx
+    return out_d2[:, :k], out_idx[:, :k]

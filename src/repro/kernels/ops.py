@@ -137,12 +137,16 @@ def window_search_segmented(
     k: int,
     tile: int,
     interpret: bool | None = None,
+    origin: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Level-segmented fused search: one masked kernel launch per ladder
     entry over the (level, Morton)-ordered query tiles (pure, traceable).
 
     Returns ``(d2 [Nq, k], idx [Nq, k], cnt [Nq])`` in the scheduled query
-    order (``window_tile_search``'s convention).
+    order (``window_tile_search``'s convention). ``origin`` overrides the
+    static spec origin for the cell lookup (sharded slabs); the kernel
+    itself works purely in cell space, so only the anchor computation here
+    needs the frame.
     """
     if interpret is None:
         interpret = INTERPRET
@@ -151,7 +155,7 @@ def window_search_segmented(
     assert n_tiles * tile == nq, (nq, tile)
     dims, cap = spec.dims, spec.capacity
     entries = segment_levels(tuple(ladder), tuple(dims))
-    qc = spec.cell_of(queries).reshape(n_tiles, tile, 3)
+    qc = spec.cell_of(queries, origin).reshape(n_tiles, tile, 3)
     plevel, anchors = assign_tile_levels(qc, tile_levels, tuple(ladder),
                                          entries, dims)
     dense_flat = grid.dense.reshape(-1)
@@ -190,6 +194,7 @@ def window_search_pallas(
     k: int,
     skip_test: bool,
     tile: int = 256,
+    origin: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Drop-in fused-path counterpart of ``core.search.window_search``
     (single uniform launch signature). Pure and traceable: anchors are
@@ -208,7 +213,8 @@ def window_search_pallas(
     ladder = ((int(w), bool(skip_test)),)
     tile_levels = jnp.zeros((n_tiles,), jnp.int32)
     d2, idx, cnt = window_search_segmented(
-        grid, points, queries, spec, ladder, tile_levels, radius, k, tile)
+        grid, points, queries, spec, ladder, tile_levels, radius, k, tile,
+        origin=origin)
     return idx[:nq], d2[:nq], cnt[:nq]
 
 

@@ -26,12 +26,16 @@ DEFAULT_TN = 256
 COORD_PAD = 8
 
 
-@functools.partial(jax.jit, static_argnames=("spec", "tn", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("spec", "mask_parked", "tn",
+                                    "interpret"))
 def bin_disp_tile(
     points: jax.Array,
     anchor_points: jax.Array,
     spec,                     # core.types.GridSpec (hashable/static)
     *,
+    origin: jax.Array | None = None,
+    mask_parked: bool = False,
     tn: int = DEFAULT_TN,
     interpret: bool = True,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
@@ -39,7 +43,12 @@ def bin_disp_tile(
 
     Returns ``(ccoord [N, 3] int32 clipped, oob int32, max_disp2 f32)`` —
     bit-identical to the jnp path in ``core.grid._bin_and_stats``.
+    ``origin`` overrides the static spec origin (sharded slabs);
+    ``mask_parked`` excludes rows parked at the slab-padding sentinel from
+    both statistics (tested in-register against ``types.PARK_THRESHOLD``,
+    so the mask costs no extra pass).
     """
+    from ..core.types import PARK_THRESHOLD
     n = points.shape[0]
     npad = (-n) % tn
     # rows: edge-replicate (real coordinates, masked out of the reductions
@@ -52,8 +61,13 @@ def bin_disp_tile(
     ap = jnp.pad(ap, ((0, 0), (0, COORD_PAD - 3)))
     n_tiles = pp.shape[0] // tn
 
-    origin = jnp.asarray(tuple(spec.origin) + (0.0,) * (COORD_PAD - 3),
-                         jnp.float32)[None, :]
+    if origin is None:
+        origin = jnp.asarray(tuple(spec.origin) + (0.0,) * (COORD_PAD - 3),
+                             jnp.float32)[None, :]
+    else:
+        origin = jnp.concatenate(
+            [origin.astype(jnp.float32).reshape(3),
+             jnp.zeros((COORD_PAD - 3,), jnp.float32)])[None, :]
     hi = jnp.asarray(tuple(d - 1 for d in spec.dims)
                      + (0,) * (COORD_PAD - 3), jnp.int32)[None, :]
     inv_cell = 1.0 / spec.cell_size
@@ -68,6 +82,11 @@ def bin_disp_tile(
         real_col = axis < 3
         row = i * tn + jax.lax.broadcasted_iota(jnp.int32, (tn, 1), 0)
         real_row = row < n                                  # [TN, 1]
+        if mask_parked:
+            parked = jnp.any(
+                (jnp.abs(p) >= jnp.float32(PARK_THRESHOLD)) & real_col,
+                axis=1, keepdims=True)                      # [TN, 1]
+            real_row = real_row & jnp.logical_not(parked)
 
         c = jnp.floor((p - o) * inv_cell).astype(jnp.int32)
         escaped = ((c < 0) | (c > h)) & real_col

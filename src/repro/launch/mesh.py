@@ -44,6 +44,35 @@ def make_mesh_compat(shape, axes):
                          axis_types=(AxisType.Auto,) * len(axes))
 
 
+def make_slab_mesh(n_slabs: int | None = None, axis: str = "data"):
+    """1-D slab mesh for the sharded-scene subsystem (``core/shards.py``).
+
+    Defaults to one slab per local device; asks for the
+    ``xla_force_host_platform_device_count`` escape hatch when more slabs
+    than devices are requested (CPU CI runs the mesh paths under 8 forced
+    host devices — see scripts/ci.sh).
+    """
+    import jax
+
+    devs = jax.devices()
+    n = int(n_slabs) if n_slabs else len(devs)
+    if n > len(devs):
+        raise RuntimeError(
+            f"need {n} devices for a {n}-slab mesh, have {len(devs)} — "
+            "run under XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{n}")
+    if n == len(devs):
+        return make_mesh_compat((n,), (axis,))
+    from jax.sharding import Mesh
+
+    dev_array = np.asarray(devs[:n]).reshape(n)
+    try:
+        from jax.sharding import AxisType
+        return Mesh(dev_array, (axis,), axis_types=(AxisType.Auto,))
+    except (ImportError, TypeError):
+        return Mesh(dev_array, (axis,))
+
+
 def make_test_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh for CPU multi-device tests."""
     import jax

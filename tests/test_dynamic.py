@@ -292,6 +292,45 @@ def test_session_pallas_path(rng):
     assert sess.stats()["fast_steps"] >= 1
 
 
+def test_session_grid_donation_alias_safety(rng):
+    """Grid-only donation (SessionOpts.donate_grid): the step donates the
+    dense-grid leaves — always session-owned — while caller-aliased
+    points/anchor buffers stay untouched. Forced ON here (the CPU backend
+    ignores donation with a warning, but the donation *plumbing* — the
+    grid split out as its own argument, no duplicate-donation, no donated
+    caller buffer — is exercised identically), across replays, replans,
+    and a respec."""
+    import warnings
+    pts = rng.random((800, 3)).astype(np.float32)
+    params = SearchParams(radius=0.1, k=8, knn_window="exact")
+    sess = SimulationSession(pts, params,
+                             sopts=SessionOpts(donate_grid=True))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")          # CPU donation warning
+        caller_buf = jnp.asarray(pts)
+        res = sess.step(caller_buf)              # force/capture step
+        _assert_oracle_exact(res, pts, pts, 0.1, 8)
+        # the caller's device buffer must NOT have been donated away
+        np.testing.assert_array_equal(np.asarray(caller_buf), pts)
+        pts2 = _drift(rng, pts, 0.0003)
+        res = sess.step(pts2)                    # replay step
+        _assert_oracle_exact(res, pts2, pts2, 0.1, 8)
+        assert sess.report.fast
+        big = pts2.copy()
+        big[5] += np.float32([sess.spec.cell_size, 0, 0])
+        res = sess.step(big)                     # replan step
+        _assert_oracle_exact(res, big, big, 0.1, 8)
+        far = (big + np.float32([4.0, 0, 0])).astype(np.float32)
+        res = sess.step(far)                     # respec step
+        assert sess.report.respecced
+        _assert_oracle_exact(res, far, far, 0.1, 8)
+
+    # default (auto) on CPU disables donation: no warning path at all
+    sess2 = SimulationSession(pts, params)
+    res = sess2.step(pts)
+    _assert_oracle_exact(res, pts, pts, 0.1, 8)
+
+
 def test_update_cell_grid_matches_fresh_build(rng):
     """The incremental update must produce the bit-identical structure a
     fresh build over the moved points would."""

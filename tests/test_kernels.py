@@ -73,6 +73,45 @@ def test_knn_tile_duplicate_points(rng):
     assert len(set(np.asarray(idx)[0].tolist())) == 4  # distinct indices
 
 
+@pytest.mark.parametrize("k", [1, 5, 8, 100])
+def test_knn_tile_lane_padded_k(rng, k):
+    """Non-multiple-of-128 K values: the output/scratch blocks are padded
+    to the lane width inside the wrapper and sliced back, so results are
+    identical to the logical-K contract (the TPU-lowering satellite; the
+    same code path runs in interpret mode here)."""
+    from repro.kernels.knn_tile import _pad_lane
+    assert _pad_lane(1) == 128 and _pad_lane(128) == 128
+    assert _pad_lane(129) == 256
+    q = jnp.asarray(rng.random((128, 3)), jnp.float32)
+    p = jnp.asarray(rng.random((400, 3)), jnp.float32)
+    wnd_idx = jnp.broadcast_to(jnp.arange(400, dtype=jnp.int32), (2, 400))
+    r = 0.5
+    d2, idx = knn_tile(q, p, wnd_idx, k=k, r2=r * r, tq=64, tm=192)
+    assert d2.shape == (128, k) and idx.shape == (128, k)
+    oi, od, oc = brute_force_search(p, q, r, k)
+    np.testing.assert_allclose(
+        np.where(np.isinf(np.asarray(d2)), -1, np.asarray(d2)),
+        np.where(np.isinf(np.asarray(od)), -1, np.asarray(od)), atol=1e-5)
+
+
+def test_knn_tile_anchored_lane_padded_k(rng):
+    """The anchored kernel under an odd K and a non-lane TM request: the
+    wrapper rounds TM up and pads K; outputs match the id-stream kernel
+    fed the identical candidates."""
+    pts, spec, grid = _grid_fixture(rng)
+    qs = jnp.asarray(rng.random((64, 3)), jnp.float32)
+    dense_flat = grid.dense.reshape(-1)
+    d2a, idxa = knn_tile_anchored(
+        qs, jnp.asarray(pts), dense_flat, jnp.zeros((1, 3), jnp.int32),
+        jnp.zeros((1,), jnp.int32), level=0, ws=spec.dims, dims=spec.dims,
+        cap=spec.capacity, k=5, r2=0.15 ** 2, tq=64, tm=200)
+    d2b, idxb = knn_tile(qs, jnp.asarray(pts), dense_flat[None, :], k=5,
+                         r2=0.15 ** 2, tq=64)
+    assert d2a.shape == (64, 5)
+    np.testing.assert_array_equal(np.asarray(d2a), np.asarray(d2b))
+    np.testing.assert_array_equal(np.asarray(idxa), np.asarray(idxb))
+
+
 def _grid_fixture(rng, n=500, r=0.15):
     from repro.core.grid import build_cell_grid, choose_grid_spec
     pts = rng.random((n, 3)).astype(np.float32)

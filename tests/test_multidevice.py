@@ -114,6 +114,173 @@ print("REMESH-OK")
     assert "REMESH-OK" in out
 
 
+def test_sharded_session_oracle_and_zero_host_routing():
+    """THE sharded acceptance property (DESIGN.md section 6): a 4-slab
+    ShardedSession stepping a drifting trajectory is oracle-equal to the
+    single-device search on every frame — including frames where particles
+    migrate across slab faces — and performs ZERO host-side routing after
+    construction (the host_routings counter stays at 1)."""
+    out = _run("""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import SearchParams, ShardedSession
+from repro.kernels.ref import brute_force_search
+rng = np.random.default_rng(2)
+n = 1200
+pts = rng.random((n, 3)).astype(np.float32)
+params = SearchParams(radius=0.1, k=8, knn_window="exact")
+sess = ShardedSession(pts, params, n_slabs=4)
+vel = rng.normal(0, 0.004, (n, 3)).astype(np.float32)
+for f in range(6):
+    rs = sess.step(pts)
+    oi, od, oc = brute_force_search(jnp.asarray(pts), jnp.asarray(pts),
+                                    0.1, 8)
+    np.testing.assert_array_equal(np.asarray(oc), np.asarray(rs.counts))
+    ds = np.where(np.isinf(np.asarray(rs.distances2)), -1,
+                  np.asarray(rs.distances2))
+    dr = np.where(np.isinf(np.asarray(od)), -1, np.asarray(od))
+    np.testing.assert_allclose(ds, dr, atol=1e-5)
+    np.testing.assert_array_equal(np.sort(np.asarray(rs.indices), 1),
+                                  np.sort(np.asarray(oi), 1))
+    pts = np.clip(pts + vel, 0.0, 1.0).astype(np.float32)  # coherent drift
+st = sess.stats()
+assert st["migrated"] > 0, st          # faces were actually crossed
+assert st["host_routings"] == 1, st    # construction only — zero per-step
+assert st["steps"] == 6 and st["reroutes"] == 0, st
+print("SHARDED-ORACLE-OK", st["migrated"])
+""")
+    assert "SHARDED-ORACLE-OK" in out
+
+
+def test_sharded_session_steady_state_replays():
+    """Below-threshold drift on a multi-slab mesh replays every slab's
+    captured plan on device: fast steps with zero host routing. Drift is
+    y/z-only so slab/halo membership is frame-stable — any x-crossing
+    (migration, halo entry/exit) changes a row's occupant and correctly
+    forces that slab to replan."""
+    out = _run("""
+import numpy as np
+from repro.core import SearchParams, ShardedSession
+rng = np.random.default_rng(5)
+pts = rng.random((900, 3)).astype(np.float32)
+sess = ShardedSession(pts, SearchParams(radius=0.1, k=8,
+                                        knn_window="exact"), n_slabs=4)
+sess.step(pts)
+drift = np.zeros_like(pts)
+for _ in range(4):
+    drift[:, 1:] = rng.normal(0, 0.0002, (900, 2))
+    pts = np.clip(pts + drift, 0.0, 1.0).astype(np.float32)
+    sess.step(pts)
+st = sess.stats()
+assert st["fast_steps"] >= 3, st
+assert st["host_routings"] == 1, st
+assert st["migrated"] == 0, st
+print("SHARDED-STEADY-OK")
+""")
+    assert "SHARDED-STEADY-OK" in out
+
+
+def test_sharded_migration_into_nearly_full_slab():
+    """Regression: an arrival from the RIGHT neighbor sits in the second
+    half of the migration buffer; the free-row merge must rank ARRIVALS
+    against the free-row count, not buffer positions — otherwise a slab
+    with fewer free rows than migrate_cap spuriously flags exhaustion and
+    forces a host re-route although rows are free."""
+    out = _run("""
+import numpy as np
+from repro.core import SearchParams, ShardedSession
+from repro.core.shards import ShardOpts
+from repro.kernels.ref import brute_force_search
+import jax.numpy as jnp
+rng = np.random.default_rng(11)
+# slab 1 fuller than slab 0 so point_cap (slack 1.0) leaves slab 0 only
+# a few free rows — fewer than migrate_cap
+pts = rng.random((200, 3)).astype(np.float32)
+pts[:96, 0] = pts[:96, 0] * 0.5          # slab 0: 96 rows
+pts[96:, 0] = 0.5 + pts[96:, 0] * 0.5    # slab 1: 104 rows
+shopts = ShardOpts(point_slack=1.0, domain_margin_radii=2.0)
+params = SearchParams(radius=0.05, k=4, knn_window="exact")
+sess = ShardedSession(pts, params, n_slabs=2, shopts=shopts)
+assert sess.layout.point_cap == 104
+sess.step(pts)
+# walk one slab-1 point leftwards across the face: it must merge into
+# one of slab 0's free rows without tripping the exhausted fallback
+pts2 = pts.copy()
+pts2[100, 0] = 0.49
+res = sess.step(pts2)
+st = sess.stats()
+assert st["migrated"] >= 1, st
+assert st["reroutes"] == 0 and st["host_routings"] == 1, st
+oi, od, oc = brute_force_search(jnp.asarray(pts2), jnp.asarray(pts2),
+                                0.05, 4)
+np.testing.assert_array_equal(np.asarray(oc), np.asarray(res.counts))
+np.testing.assert_array_equal(np.sort(np.asarray(res.indices), 1),
+                              np.sort(np.asarray(oi), 1))
+print("MIGRATE-MERGE-OK")
+""")
+    assert "MIGRATE-MERGE-OK" in out
+
+
+def test_distributed_routing_edge_cases():
+    """Satellite: empty slabs, all-points-in-one-slab skew, and queries
+    landing exactly on slab faces must all round-trip in original query
+    order with correct global ids."""
+    out = _run("""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core.distributed import distributed_neighbor_search
+from repro.core.types import SearchParams
+from repro.kernels.ref import brute_force_search
+from repro.launch.mesh import make_mesh_compat
+
+def check(pts, qs, r=0.08, K=8):
+    mesh = make_mesh_compat((4, 2), ("data", "model"))
+    res = distributed_neighbor_search(mesh, pts, qs,
+                                      SearchParams(radius=r, k=K))
+    oi, od, oc = brute_force_search(jnp.asarray(pts), jnp.asarray(qs),
+                                    r, K)
+    np.testing.assert_array_equal(np.asarray(oc), np.asarray(res.counts))
+    np.testing.assert_array_equal(np.sort(np.asarray(res.indices), 1),
+                                  np.sort(np.asarray(oi), 1))
+    dg = np.where(np.isinf(np.asarray(res.distances2)), -1,
+                  np.asarray(res.distances2))
+    dr = np.where(np.isinf(np.asarray(od)), -1, np.asarray(od))
+    np.testing.assert_allclose(dg, dr, atol=1e-5)
+
+rng = np.random.default_rng(7)
+
+# 1. empty middle slabs: bimodal x — slabs 1..2 own (almost) nothing
+pts = rng.random((1500, 3)).astype(np.float32)
+pts[:, 0] = np.where(rng.random(1500) < 0.5, pts[:, 0] * 0.1,
+                     0.9 + pts[:, 0] * 0.1)
+qs = rng.random((300, 3)).astype(np.float32)   # queries everywhere,
+check(pts, qs)                                  # incl. the empty slabs
+print("EDGE-EMPTY-OK")
+
+# 2. all-points-in-one-slab skew: one outlier stretches the domain so
+# ~all points land in slab 0
+pts = rng.random((1000, 3)).astype(np.float32)
+pts[:, 0] *= 0.05
+pts[0, 0] = 1.0
+qs = rng.random((200, 3)).astype(np.float32)
+check(pts, qs)
+print("EDGE-SKEW-OK")
+
+# 3. queries exactly on slab faces (and points near them): the face
+# position must route to exactly one slab and find cross-face neighbors
+# through the halo
+pts = rng.random((2000, 3)).astype(np.float32)
+qs = rng.random((256, 3)).astype(np.float32)
+lo = pts[:, 0].min()
+width = (pts[:, 0].max() - lo) / 4.0
+for i, s in enumerate([1, 2, 3] * 40):          # exact face x-coords
+    qs[i, 0] = np.float32(lo + s * width)
+check(pts, qs)
+print("EDGE-FACE-OK")
+""")
+    assert "EDGE-EMPTY-OK" in out
+    assert "EDGE-SKEW-OK" in out
+    assert "EDGE-FACE-OK" in out
+
+
 def test_api_query_composes_with_shard_map():
     """The functional core's acceptance composition: stacked same-spec
     scenes sharded over a device mesh axis, a vmapped api.query per shard —

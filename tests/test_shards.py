@@ -1,0 +1,201 @@
+"""Sharded-scene subsystem unit tests that need NO device mesh (the traced
+routing/unrouting scatters, layout planning, and the degenerate 1-slab
+mesh, which runs on the single CPU device). The multi-slab paths — halo
+exchange, migration, query split — run under 8 forced host devices in
+tests/test_multidevice.py."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (SearchOpts, SearchParams, ShardedSession,
+                        SimulationSession, shard_scene)
+from repro.core.shards import (STATIC_SCENE_OPTS, ShardOpts, plan_layout,
+                               route_points, route_queries,
+                               unroute_results)
+from repro.kernels.ref import brute_force_search
+
+PARAMS = SearchParams(radius=0.12, k=8, knn_window="exact")
+
+
+def test_route_points_roundtrip(rng):
+    """Every point lands in exactly one slab slot, with its global id, in
+    the slab its x-coordinate selects; zero overflow when the layout was
+    planned over the same points."""
+    pts = rng.random((700, 3)).astype(np.float32)
+    layout = plan_layout(pts, PARAMS, 4)
+    spts, sids, ovf = route_points(layout, jnp.asarray(pts))
+    assert int(ovf) == 0
+    sids_np = np.asarray(sids)
+    spts_np = np.asarray(spts)
+    seen = sids_np[sids_np >= 0]
+    assert sorted(seen.tolist()) == list(range(700))    # each id once
+    for s in range(4):
+        row = sids_np[s]
+        sel = row[row >= 0]
+        np.testing.assert_array_equal(spts_np[s][row >= 0], pts[sel])
+        # routed rows belong to this slab
+        slab = np.clip(((pts[sel, 0] - layout.lo_x)
+                        / np.float32(layout.slab_width)).astype(int),
+                       0, 3)
+        assert (slab == s).all()
+
+
+def test_route_points_overflow_detected(rng):
+    """A slab fuller than point_cap reports the dropped count instead of
+    silently truncating (the session's re-route trigger)."""
+    pts = rng.random((300, 3)).astype(np.float32)
+    layout = plan_layout(pts, PARAMS, 2)
+    tight = dataclasses.replace(layout, point_cap=100)
+    _p, _i, ovf = route_points(tight, jnp.asarray(pts))
+    slab = np.clip(((pts[:, 0] - layout.lo_x) / layout.slab_width)
+                   .astype(int), 0, 1)
+    expected = int(np.maximum(np.bincount(slab, minlength=2) - 100,
+                              0).sum())
+    assert int(ovf) == expected and expected > 0
+
+
+def test_route_queries_roundtrip_and_unroute(rng):
+    """Queries split round-robin over the qsplit columns and scatter back
+    to the original order through unroute_results."""
+    pts = rng.random((500, 3)).astype(np.float32)
+    qs = rng.random((123, 3)).astype(np.float32)
+    layout = plan_layout(pts, PARAMS, 3, n_qsplit=2, queries=qs)
+    rq, qid, ovf = route_queries(layout, jnp.asarray(qs))
+    assert int(ovf) == 0
+    qid_np = np.asarray(qid)
+    seen = qid_np[qid_np >= 0]
+    assert sorted(seen.tolist()) == list(range(123))
+    # fabricate per-slot results = the query id itself; unroute must give
+    # back identity in original order
+    k = 4
+    gidx = jnp.broadcast_to(qid[..., None], qid.shape + (k,))
+    d2 = jnp.where(gidx >= 0, 0.5, jnp.inf).astype(jnp.float32)
+    cnt = jnp.where(qid >= 0, 7, 0).astype(jnp.int32)
+    oi, od, oc = unroute_results(qid, gidx, d2, cnt, 123)
+    np.testing.assert_array_equal(np.asarray(oi)[:, 0], np.arange(123))
+    assert (np.asarray(oc) == 7).all()
+
+
+def test_plan_layout_caps_cover_data(rng):
+    pts = rng.random((900, 3)).astype(np.float32)
+    layout = plan_layout(pts, PARAMS, 4, shopts=STATIC_SCENE_OPTS)
+    slab = np.clip(((pts[:, 0] - layout.lo_x) / layout.slab_width)
+                   .astype(int), 0, 3)
+    assert np.bincount(slab, minlength=4).max() <= layout.point_cap
+    assert layout.halo_cap >= 1 and layout.migrate_cap >= 1
+    # boost inflates every headroom knob
+    boosted = plan_layout(pts, PARAMS, 4, boost=2.0)
+    assert boosted.point_cap >= layout.point_cap
+    assert boosted.spec.capacity >= layout.spec.capacity
+
+
+def test_shard_scene_one_slab_matches_single_device(rng):
+    """S=1 degenerates to the functional core (no halo, no neighbors):
+    the full sharded program — traced route, shard_map(api.query),
+    unroute — must match brute force exactly on the single CPU device."""
+    pts = rng.random((600, 3)).astype(np.float32)
+    qs = rng.random((150, 3)).astype(np.float32)
+    index = shard_scene(pts, PARAMS, n_slabs=1, queries=qs)
+    res = index.query(qs)
+    oi, od, oc = brute_force_search(jnp.asarray(pts), jnp.asarray(qs),
+                                    PARAMS.radius, PARAMS.k)
+    np.testing.assert_array_equal(np.asarray(oi), np.asarray(res.indices))
+    np.testing.assert_array_equal(np.asarray(oc), np.asarray(res.counts))
+    dr = np.where(np.isinf(np.asarray(od)), -1, np.asarray(od))
+    dg = np.where(np.isinf(np.asarray(res.distances2)), -1,
+                  np.asarray(res.distances2))
+    np.testing.assert_allclose(dg, dr, atol=1e-6)
+
+
+def test_shard_scene_composes_with_pallas(rng):
+    """use_pallas routes the per-slab search through the level-segmented
+    fused schedule with the slab's dynamic origin feeding the anchor
+    computation — results stay oracle-exact."""
+    pts = rng.random((400, 3)).astype(np.float32)
+    qs = rng.random((100, 3)).astype(np.float32)
+    params = SearchParams(radius=0.15, k=8, knn_window="exact")
+    index = shard_scene(pts, params, n_slabs=1,
+                        opts=SearchOpts(use_pallas=True, query_tile=128),
+                        queries=qs)
+    res = index.query(qs)
+    oi, od, oc = brute_force_search(jnp.asarray(pts), jnp.asarray(qs),
+                                    0.15, 8)
+    np.testing.assert_array_equal(np.asarray(oc), np.asarray(res.counts))
+    np.testing.assert_array_equal(
+        np.sort(np.asarray(res.indices), axis=1),
+        np.sort(np.asarray(oi), axis=1))
+
+
+def test_sharded_session_one_slab_matches_simulation_session(rng):
+    """The slab-resident session on a 1-slab mesh steps the identical
+    trajectory as a single-device SimulationSession: same counts, same
+    distance multisets, same neighbor id sets, zero host routing after
+    construction."""
+    pts = rng.random((500, 3)).astype(np.float32)
+    sh = ShardedSession(pts, PARAMS, n_slabs=1)
+    ref = SimulationSession(pts, PARAMS)
+    for _ in range(5):
+        rs = sh.step(pts)
+        rr = ref.step(pts)
+        np.testing.assert_array_equal(np.asarray(rs.counts),
+                                      np.asarray(rr.counts))
+        ds = np.where(np.isinf(np.asarray(rs.distances2)), -1,
+                      np.asarray(rs.distances2))
+        dr = np.where(np.isinf(np.asarray(rr.distances2)), -1,
+                      np.asarray(rr.distances2))
+        np.testing.assert_allclose(ds, dr, atol=1e-6)
+        np.testing.assert_array_equal(
+            np.sort(np.asarray(rs.indices), axis=1),
+            np.sort(np.asarray(rr.indices), axis=1))
+        pts = np.clip(pts + rng.normal(0, 0.0006, pts.shape),
+                      0.0, 1.0).astype(np.float32)
+    st = sh.stats()
+    assert st["host_routings"] == 1          # construction only
+    assert st["steps"] == 5 and st["fast_steps"] >= 1
+    assert st["reroutes"] == 0
+
+
+def test_sharded_session_reroute_fallback(rng):
+    """A scene the frozen layout cannot hold (mass escape past the domain
+    margin) trips the exhausted flag and falls back to ONE host re-route,
+    after which results are exact again."""
+    pts = rng.random((300, 3)).astype(np.float32)
+    sess = ShardedSession(pts, PARAMS, n_slabs=1)
+    sess.step(pts)
+    far = (pts + np.float32([3.0, 0.0, 0.0])).astype(np.float32)
+    res = sess.step(far)
+    st = sess.stats()
+    assert st["reroutes"] == 1 and st["host_routings"] == 2
+    oi, od, oc = brute_force_search(jnp.asarray(far), jnp.asarray(far),
+                                    PARAMS.radius, PARAMS.k)
+    np.testing.assert_array_equal(np.asarray(oc), np.asarray(res.counts))
+    np.testing.assert_array_equal(
+        np.sort(np.asarray(res.indices), axis=1),
+        np.sort(np.asarray(oi), axis=1))
+    # and the session keeps stepping normally afterwards
+    sess.step(far)
+    assert sess.stats()["reroutes"] == 1
+
+
+def test_sharded_session_reroute_disabled_raises(rng):
+    pts = rng.random((200, 3)).astype(np.float32)
+    sess = ShardedSession(pts, PARAMS, n_slabs=1,
+                          shopts=ShardOpts(auto_reroute=False))
+    sess.step(pts)
+    with pytest.raises(RuntimeError, match="exhausted"):
+        sess.step(pts + np.float32([5.0, 0, 0]))
+
+
+def test_query_cap_overflow_raises(rng):
+    """A query batch denser than the planned cap fails loudly with the
+    re-plan hint instead of silently dropping queries."""
+    pts = rng.random((400, 3)).astype(np.float32)
+    few = rng.random((10, 3)).astype(np.float32)
+    index = shard_scene(pts, PARAMS, n_slabs=1, queries=few,
+                        shopts=STATIC_SCENE_OPTS)
+    many = rng.random((200, 3)).astype(np.float32)
+    with pytest.raises(RuntimeError, match="query_cap"):
+        index.query(many)
