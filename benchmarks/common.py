@@ -2,12 +2,45 @@
 follow the ``name,us_per_call,derived`` CSV contract of run.py."""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
-import numpy as np
 
 ROWS: list[tuple[str, float, str]] = []
+
+
+def provenance() -> dict:
+    """Environment stamp for BENCH_*.json entries: the regression gate
+    (scripts/check_bench.py) only compares ratios measured under the same
+    backend/device-count, and the jax version makes the accumulated bench
+    trajectory interpretable."""
+    return {
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_count": int(jax.device_count()),
+    }
+
+
+def write_bench(path: str, results: dict) -> dict:
+    """Stamp each result row with :func:`provenance` and merge-accumulate
+    into the JSON at ``path`` (the shared BENCH_*.json contract of the
+    fig_* modules: existing cases from other smoke/full runs survive,
+    same-name cases are replaced). Returns the stamped rows."""
+    prov = provenance()
+    stamped = {case: ({**row, "provenance": prov}
+                      if isinstance(row, dict) else row)
+               for case, row in results.items()}
+    out = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            out = json.load(f)
+    out.update(stamped)
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return stamped
 
 
 def timeit(fn, *args, warmup: int = 1, repeats: int = 3) -> float:

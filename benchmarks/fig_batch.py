@@ -16,7 +16,6 @@ Writes per-case rows to ``BENCH_batch.json`` at the repo root.
 """
 from __future__ import annotations
 
-import json
 import os
 import time
 
@@ -28,7 +27,7 @@ import repro.api as api
 from repro.core import (SearchOpts, SearchParams, SimulationSession,
                         choose_grid_spec)
 
-from .common import emit
+from .common import emit, write_bench
 
 SMOKE = os.environ.get("REPRO_BENCH_SMOKE", "0") == "1"
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_batch.json")
@@ -135,12 +134,4 @@ def run(k=16):
         emit(f"figbatch/{name}/vmapped", t_b / (b * n),
              f"speedup={row['speedup']:.2f}x;one program")
 
-    out = {}
-    if os.path.exists(OUT_PATH):        # accumulate across smoke/full runs
-        with open(OUT_PATH) as f:
-            out = json.load(f)
-    out.update(results)
-    with open(OUT_PATH, "w") as f:
-        json.dump(out, f, indent=2, sort_keys=True)
-        f.write("\n")
-    return results
+    return write_bench(OUT_PATH, results)

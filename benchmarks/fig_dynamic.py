@@ -17,7 +17,6 @@ the workload for CI (scripts/ci.sh).
 """
 from __future__ import annotations
 
-import json
 import os
 import time
 
@@ -26,7 +25,7 @@ import numpy as np
 from repro.core import (NeighborSearch, SearchOpts, SearchParams,
                         SimulationSession)
 
-from .common import emit
+from .common import emit, write_bench
 
 SMOKE = os.environ.get("REPRO_BENCH_SMOKE", "0") == "1"
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
@@ -118,12 +117,4 @@ def run(k=16):
              f"fast={row['fast_steps']}/{steps};"
              f"replans={row['replans']}")
 
-    out = {}
-    if os.path.exists(OUT_PATH):        # accumulate across smoke/full runs
-        with open(OUT_PATH) as f:
-            out = json.load(f)
-    out.update(results)
-    with open(OUT_PATH, "w") as f:
-        json.dump(out, f, indent=2, sort_keys=True)
-        f.write("\n")
-    return results
+    return write_bench(OUT_PATH, results)

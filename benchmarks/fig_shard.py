@@ -132,7 +132,7 @@ def _parity_case(n, steps, radius, k):
 
 
 def run():
-    from .common import emit
+    from .common import emit, write_bench
     if SMOKE:
         n, steps, slabs = 2_000, 9, 4
     else:
@@ -157,12 +157,4 @@ def run():
          f"speedup={row['speedup']:.2f}x;migrated={row['migrated']};"
          f"routing={row['host_routings']}")
 
-    out = {}
-    if os.path.exists(OUT_PATH):        # accumulate across smoke/full runs
-        with open(OUT_PATH) as f:
-            out = json.load(f)
-    out.update(results)
-    with open(OUT_PATH, "w") as f:
-        json.dump(out, f, indent=2, sort_keys=True)
-        f.write("\n")
-    return results
+    return write_bench(OUT_PATH, results)

@@ -16,7 +16,6 @@ that column measures orchestration structure, not kernel speed.
 """
 from __future__ import annotations
 
-import json
 import os
 
 import jax
@@ -26,7 +25,7 @@ import repro.api as api
 from repro.core import NeighborSearch, SearchOpts, SearchParams
 from repro.data.pointclouds import dataset_by_name
 
-from .common import emit
+from .common import emit, write_bench
 
 SMOKE = os.environ.get("REPRO_BENCH_SMOKE", "0") == "1"
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
@@ -148,12 +147,4 @@ def run(k=8):
             emit(f"figtp/{name}/pallas-traced", t_tr / nq,
                  "one compiled program;interpret-mode kernels")
 
-    out = {}
-    if os.path.exists(OUT_PATH):        # accumulate across smoke/full runs
-        with open(OUT_PATH) as f:
-            out = json.load(f)
-    out.update(results)
-    with open(OUT_PATH, "w") as f:
-        json.dump(out, f, indent=2, sort_keys=True)
-        f.write("\n")
-    return results
+    return write_bench(OUT_PATH, results)

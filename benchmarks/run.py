@@ -75,6 +75,13 @@ def main() -> None:
         print(f"# {key} done in {time.time() - t0:.1f}s")
         summary.extend(_summarize(key, results))
     _print_summary(summary)
+    # with REPRO_TRACE on, the unified telemetry registry (executor /
+    # session / sharded-session counters and latency percentiles collected
+    # while the figures ran) follows the ratio table
+    from repro import obs
+    if obs.trace_enabled():
+        print()
+        print(obs.summary())
 
 
 if __name__ == '__main__':

@@ -12,7 +12,20 @@ session).
 The gated statistic is each row's *speedup ratio* (old path / new path),
 not absolute wall time: the ratio cancels machine speed, so the gate is
 meaningful on shared CI hardware where absolute timings swing far more
-than any real regression. Knobs:
+than any real regression. Two further rules keep the gate honest:
+
+* **like-against-like** — rows carry a provenance stamp (jax version,
+  backend, device count; ``benchmarks/common.provenance``). A case whose
+  baseline was measured under a different backend or device count is
+  SKIPPED, not gated: such a ratio shift is an environment change, not a
+  code regression. Un-stamped baselines (pre-provenance history) gate as
+  before.
+* **metric-delta table** — every shared numeric metric of each case (the
+  unified schema the fig_* modules emit) is printed as an old/new/delta%
+  table per figure, so a gate verdict always comes with the full context
+  of what moved.
+
+Knobs:
 
   REPRO_BENCH_TOL    fractional regression tolerance (default 0.10)
   REPRO_BENCH_GATE   0 disables the gate (always exit 0)
@@ -65,6 +78,39 @@ def _baseline(path: str) -> dict | None:
         return None
 
 
+# provenance keys whose mismatch invalidates a ratio comparison (the jax
+# version is stamped for the trajectory record but does not skip the gate:
+# ratios are expected to survive library upgrades, and silently un-gating
+# every version bump would blind CI)
+_PROV_GATE_KEYS = ("backend", "device_count")
+
+
+def _prov_mismatch(cur_row: dict, base_row: dict) -> list[str]:
+    """Provenance keys that differ — [] gates; non-empty skips the case.
+    Un-stamped rows (either side) compare as matching for back-compat with
+    pre-provenance baselines."""
+    cp, bp = cur_row.get("provenance"), base_row.get("provenance")
+    if not isinstance(cp, dict) or not isinstance(bp, dict):
+        return []
+    return [k for k in _PROV_GATE_KEYS if cp.get(k) != bp.get(k)]
+
+
+def _metric_rows(case: str, cur_row: dict, base_row: dict) -> list[tuple]:
+    """(case, metric, old, new, delta%) for every shared numeric metric."""
+    rows = []
+    for k in sorted(set(cur_row) & set(base_row)):
+        cv, bv = cur_row[k], base_row[k]
+        if isinstance(cv, bool) or isinstance(bv, bool):
+            continue
+        if not isinstance(cv, (int, float)) or not isinstance(bv,
+                                                              (int, float)):
+            continue
+        delta = ((float(cv) - float(bv)) / float(bv) * 100.0 if bv
+                 else (0.0 if not cv else float("inf")))
+        rows.append((case, k, float(bv), float(cv), delta))
+    return rows
+
+
 def _gate_one(path: str) -> int:
     """Gate one BENCH file; returns the number of regressed cases (or a
     synthetic 1 when the fresh file is missing entirely)."""
@@ -83,24 +129,49 @@ def _gate_one(path: str) -> int:
               "cases with the baseline — skipping (commit the smoke row "
               "to enable the gate)")
         return 0
-    tol = TOL * _TOL_SCALE.get(os.path.basename(path), 1.0)
-    failures = []
+    name = os.path.basename(path)
+    tol = TOL * _TOL_SCALE.get(name, 1.0)
+    failures, gated = [], 0
+    table: list[tuple] = []
+    verdicts: dict = {}
     for case in shared:
-        new = float(current[case].get(METRIC, 0.0))
-        old = float(base[case].get(METRIC, 0.0))
-        verdict = "ok"
+        cur_row, base_row = current[case], base[case]
+        diffs = _prov_mismatch(cur_row, base_row)
+        if diffs:
+            cp = cur_row.get("provenance", {})
+            bp = base_row.get("provenance", {})
+            detail = ", ".join(f"{k}: {bp.get(k)} -> {cp.get(k)}"
+                               for k in diffs)
+            print(f"check_bench: {name}: {case}: SKIPPED — baseline "
+                  f"provenance differs ({detail}); not like-against-like")
+            continue
+        gated += 1
+        table.extend(_metric_rows(case, cur_row, base_row))
+        new = float(cur_row.get(METRIC, 0.0))
+        old = float(base_row.get(METRIC, 0.0))
         if old > 0 and new < old * (1.0 - tol):
-            verdict = "REGRESSED"
+            verdicts[case] = "REGRESSED"
             failures.append(case)
-        print(f"check_bench: {os.path.basename(path)}: {case}: {METRIC} "
-              f"{old:.3f} -> {new:.3f} [{verdict}]")
+        else:
+            verdicts[case] = "ok"
+    if table:
+        case_w = max(len(r[0]) for r in table) + 2
+        met_w = max(len(r[1]) for r in table) + 2
+        print(f"# ---- {name}: metric deltas vs committed baseline ----")
+        print(f"# {'case':<{case_w}}{'metric':<{met_w}}{'old':>12}"
+              f"{'new':>12}{'delta':>9}")
+        for case, metric, old, new, delta in table:
+            mark = (f" [{verdicts[case]}]" if metric == METRIC else "")
+            print(f"# {case:<{case_w}}{metric:<{met_w}}{old:>12.3f}"
+                  f"{new:>12.3f}{delta:>+8.1f}%{mark}")
     if failures:
-        print(f"check_bench: FAIL — {os.path.basename(path)}: "
-              f"{len(failures)} case(s) regressed >{tol:.0%} vs committed "
-              f"baseline: {', '.join(failures)}")
+        print(f"check_bench: FAIL — {name}: {len(failures)} case(s) "
+              f"regressed >{tol:.0%} vs committed baseline: "
+              f"{', '.join(failures)}")
+    elif gated:
+        print(f"check_bench: {name}: OK ({gated} case(s) within {tol:.0%})")
     else:
-        print(f"check_bench: {os.path.basename(path)}: OK "
-              f"({len(shared)} case(s) within {tol:.0%})")
+        print(f"check_bench: {name}: no like-against-like cases to gate")
     return len(failures)
 
 

@@ -12,6 +12,11 @@ python -m pytest -x -q --ignore=tests/test_multidevice.py
 # exports change without a CHANGES.md note — see tests/test_api.py)
 python -m pytest -x -q tests/test_api.py::test_public_api_snapshot
 
+# telemetry-on smoke: the tier-1 suite once with span recording enabled
+# (REPRO_TRACE=1, DESIGN.md section 9) so host-side telemetry can never
+# change results or break the one-sync/caching contracts unnoticed
+REPRO_TRACE=1 python -m pytest -x -q --ignore=tests/test_multidevice.py
+
 # the mesh paths (sharded sessions, distributed routing, shard_map
 # composition) under 8 forced host devices so they execute on CPU CI even
 # when the default device count is 1 (the tests also re-exec themselves in

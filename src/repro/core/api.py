@@ -176,16 +176,17 @@ def build_index(points, params: SearchParams,
         # ->host round-trip of the full cloud
         spec = choose_grid_spec(np.asarray(points, np.float32),
                                 params.radius)
-    points = jnp.asarray(points, jnp.float32)
-    if origin is not None:
-        origin = jnp.asarray(origin, jnp.float32)
-    valid = jnp.logical_not(parked_mask(points)) if opts.mask_parked \
-        else None
-    grid = build_cell_grid(points, spec, origin, valid)
-    statics = megacell_statics(spec.cell_size, params, opts.w_max)
-    return NeighborIndex(params=params, opts=opts, statics=statics,
-                         points=points, grid=grid, anchor_points=points,
-                         origin=origin)
+    with jax.named_scope("repro.build_index"):
+        points = jnp.asarray(points, jnp.float32)
+        if origin is not None:
+            origin = jnp.asarray(origin, jnp.float32)
+        valid = jnp.logical_not(parked_mask(points)) if opts.mask_parked \
+            else None
+        grid = build_cell_grid(points, spec, origin, valid)
+        statics = megacell_statics(spec.cell_size, params, opts.w_max)
+        return NeighborIndex(params=params, opts=opts, statics=statics,
+                             points=points, grid=grid, anchor_points=points,
+                             origin=origin)
 
 
 def update_index(index: NeighborIndex,
@@ -200,12 +201,13 @@ def update_index(index: NeighborIndex,
     the replan branch's job (``with_anchor``), typically under the
     session's ``lax.cond``.
     """
-    pts = jnp.asarray(new_points, jnp.float32)
-    grid, stats, _ccoord = update_cell_grid_traced(
-        index.grid, pts, index.anchor_points,
-        use_pallas=index.opts.use_pallas, origin=index.origin,
-        mask_parked=index.opts.mask_parked)
-    return (dataclasses.replace(index, points=pts, grid=grid), stats)
+    with jax.named_scope("repro.update_index"):
+        pts = jnp.asarray(new_points, jnp.float32)
+        grid, stats, _ccoord = update_cell_grid_traced(
+            index.grid, pts, index.anchor_points,
+            use_pallas=index.opts.use_pallas, origin=index.origin,
+            mask_parked=index.opts.mask_parked)
+        return (dataclasses.replace(index, points=pts, grid=grid), stats)
 
 
 # ---------------------------------------------------------------------------
@@ -224,35 +226,37 @@ def plan_query(index: NeighborIndex, queries, *,
     captured plan stays exact while drift remains under the session
     threshold.
     """
-    queries = jnp.asarray(queries, jnp.float32)
-    params, opts, statics = index.params, index.opts, index.statics
-    spec = index.spec
-    nq = queries.shape[0]
-    tile = opts.query_tile
-    partitioned = opts.partition and statics.has_megacells
-    ladder = launch_signatures(statics, params, margin=margin,
-                               enabled=partitioned, w_ladder=opts.w_ladder)
-    ccoord = spec.cell_of(queries, index.origin)
-    if partitioned:
-        w_search, skip, _rho = compute_megacells(index.grid, queries,
-                                                 statics, params,
-                                                 index.origin)
-        if margin:
-            w_search = jnp.minimum(w_search + jnp.int32(margin),
-                                   jnp.int32(statics.w_full))
-            skip = skip & (w_search <= statics.w_sph)
-        levels = signature_levels(w_search, skip, ladder)
-    else:
-        levels = jnp.zeros((nq,), jnp.int32)
-    perm = schedule_by_level(ccoord, levels, morton=opts.schedule)
-    npad = (-nq) % tile
-    # edge-replicate padding (same discipline as the executor's padded
-    # selections): padded slots repeat the last scheduled query
-    take = jnp.minimum(jnp.arange(nq + npad), nq - 1)
-    perm_p = perm[take].astype(jnp.int32)
-    tile_levels = jnp.max(levels[perm_p].reshape(-1, tile), axis=1)
-    return QueryPlan(nq=nq, tile=tile, ladder=ladder, perm=perm_p,
-                     tile_levels=tile_levels)
+    with jax.named_scope("repro.plan_query"):
+        queries = jnp.asarray(queries, jnp.float32)
+        params, opts, statics = index.params, index.opts, index.statics
+        spec = index.spec
+        nq = queries.shape[0]
+        tile = opts.query_tile
+        partitioned = opts.partition and statics.has_megacells
+        ladder = launch_signatures(statics, params, margin=margin,
+                                   enabled=partitioned,
+                                   w_ladder=opts.w_ladder)
+        ccoord = spec.cell_of(queries, index.origin)
+        if partitioned:
+            w_search, skip, _rho = compute_megacells(index.grid, queries,
+                                                     statics, params,
+                                                     index.origin)
+            if margin:
+                w_search = jnp.minimum(w_search + jnp.int32(margin),
+                                       jnp.int32(statics.w_full))
+                skip = skip & (w_search <= statics.w_sph)
+            levels = signature_levels(w_search, skip, ladder)
+        else:
+            levels = jnp.zeros((nq,), jnp.int32)
+        perm = schedule_by_level(ccoord, levels, morton=opts.schedule)
+        npad = (-nq) % tile
+        # edge-replicate padding (same discipline as the executor's padded
+        # selections): padded slots repeat the last scheduled query
+        take = jnp.minimum(jnp.arange(nq + npad), nq - 1)
+        perm_p = perm[take].astype(jnp.int32)
+        tile_levels = jnp.max(levels[perm_p].reshape(-1, tile), axis=1)
+        return QueryPlan(nq=nq, tile=tile, ladder=ladder, perm=perm_p,
+                         tile_levels=tile_levels)
 
 
 def _segment_launches() -> bool:
@@ -279,6 +283,11 @@ def execute_plan(index: NeighborIndex, queries,
     ladder level. Either way the scatter back through ``perm`` happens on
     device and the whole call is one traced program.
     """
+    with jax.named_scope("repro.execute_plan"):
+        return _execute_plan_scoped(index, queries, plan)
+
+
+def _execute_plan_scoped(index, queries, plan):
     queries = jnp.asarray(queries, jnp.float32)
     params = index.params
     k, tile, nq = params.k, plan.tile, plan.nq

@@ -40,7 +40,6 @@ thin shim over the functional core (``core/api.py``):
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
 import math
 import time
@@ -49,6 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from . import api
 from .grid import choose_grid_spec
 from .types import (Array, GridSpec, SearchOpts, SearchParams, SearchResult)
@@ -130,19 +130,20 @@ class SessionOpts:
 class StepReport:
     """Per-step breakdown (the session analogue of ``SearchReport``).
 
-    The staleness statistic now lives on device (``max_disp`` is only
-    populated on the rare respec/raise path, where the full stats are
-    fetched); ``t_update``/``t_plan`` are 0.0 because update, plan, and
-    search are one fused program timed as ``t_search``.
+    The staleness statistic lives on device but rides the packed telemetry
+    vector (obs/device.py), so ``max_disp`` / ``overflow`` / ``oob`` are
+    populated every step at no extra sync; ``t_update``/``t_plan`` are 0.0
+    because update, plan, and search are one fused program timed as
+    ``t_search``.
     """
 
     t_update: float = 0.0      # merged into t_search (fused step program)
     t_plan: float = 0.0        # merged into t_search (fused step program)
-    t_search: float = 0.0      # fused step dispatch + flags/result sync
+    t_search: float = 0.0      # fused step dispatch + telemetry/result sync
     fast: bool = False         # replayed the captured plan (device decision)
     replanned: bool = False
     respecced: bool = False
-    max_disp: float = 0.0      # fetched only on the respec/raise path
+    max_disp: float = 0.0      # from the packed telemetry vector
     overflow: int = 0
     oob: int = 0
 
@@ -185,8 +186,11 @@ def session_grid_spec(points: np.ndarray, radius: float,
 # the fused step program
 # ---------------------------------------------------------------------------
 
-# flags bitmask returned by the fused step (ONE packed scalar is the only
-# per-step host transfer; fetching it doubles as the result sync)
+# flags bitmask in slot 0 of the packed telemetry vector returned by the
+# fused step (ONE packed int32 vector is the only per-step host transfer;
+# fetching it doubles as the result sync — obs/device.py lays out the
+# remaining slots: overflow, oob, displacement bits, migration, halo, and
+# the per-ladder-level occupancy histogram)
 _FLAG_REPLANNED = 1     # staleness cond took the replan branch
 _FLAG_EXHAUSTED = 2     # overflow/oob: frozen spec can no longer bin exactly
 
@@ -236,7 +240,14 @@ def _step_impl(grid, index_rest: api.NeighborIndex, plan, pts: Array,
     res = api.execute_plan(index3, q, plan2)
     flags = (stale.astype(jnp.int32) * _FLAG_REPLANNED
              + bad.astype(jnp.int32) * _FLAG_EXHAUSTED)
-    return index3, plan2, anchor_q2, res, flags, stats
+    # widen the flags scalar into the packed telemetry vector: still ONE
+    # per-step transfer (obs/device.py), computed unconditionally so the
+    # step jaxpr is identical with host-side telemetry on or off
+    telem = obs.pack_step_telemetry(
+        flags, overflow=stats.overflow, oob=stats.oob, max_disp2=disp2,
+        occupancy=obs.level_occupancy(plan2.tile_levels,
+                                      len(plan2.ladder)))
+    return index3, plan2, anchor_q2, res, telem, stats
 
 
 # NOTE: the step donates ONLY the grid argument (argument 0, the dense-grid
@@ -291,7 +302,9 @@ class SimulationSession:
         # all) instead of pinning them in a module-global cache forever
         self._step_fn = jax.jit(_step_impl, static_argnames=_STEP_STATICS,
                                 donate_argnums=(0,) if donate else ())
-        self._counters = collections.Counter()
+        # lifecycle counters + step-latency histogram in the unified
+        # registry (repro.obs)
+        self._metrics = obs.metric_set("session")
         self.report = StepReport()
 
     # -- surface ------------------------------------------------------------
@@ -311,8 +324,8 @@ class SimulationSession:
 
     def stats(self) -> dict:
         counters = dict(steps=0, fast_steps=0, replans=0, respecs=0,
-                        stats_fetches=0)
-        counters.update({k: int(v) for k, v in self._counters.items()})
+                        stats_fetches=0, host_syncs=0)
+        counters.update(self._metrics.counters())
         return {
             **counters,
             "last": dataclasses.asdict(self.report),
@@ -332,6 +345,23 @@ class SimulationSession:
             thr2=thr2, margin=int(self.sopts.reuse_margin_cells),
             force=bool(force), self_query=bool(self_query))
 
+    def _dispatch_synced(self, index, pts, q, anchor_q, force, self_query):
+        """Launch the fused step, then fetch the packed telemetry vector —
+        still the session's ONE blocking transfer per step. A jit compile
+        is detected from step-cache growth and recorded as a compile span
+        nested under the launch."""
+        cache0 = int(self._step_fn._cache_size())
+        with obs.span("launch", forced=bool(force)):
+            t0 = time.perf_counter()
+            out = self._dispatch(index, pts, q, anchor_q, force, self_query)
+            if int(self._step_fn._cache_size()) > cache0:
+                obs.record_span("compile", time.perf_counter() - t0)
+        with obs.span("sync"):
+            telem = obs.unpack_step_telemetry(
+                np.asarray(jax.device_get(out[4])))
+        self._metrics.count("host_syncs")
+        return out, telem
+
     def step(self, points, queries=None) -> SearchResult:
         """Advance the session to ``points`` and search.
 
@@ -342,86 +372,104 @@ class SimulationSession:
         scalar is the only host transfer (it materializes the results).
         """
         rep = StepReport()
-        t0 = time.perf_counter()
-        pts = jnp.asarray(points, jnp.float32)
-        self_query = queries is None or queries is points
-        q = pts if self_query else jnp.asarray(queries, jnp.float32)
+        m = self._metrics
+        with obs.span("step") as sp_step:
+            pts = jnp.asarray(points, jnp.float32)
+            self_query = queries is None or queries is points
+            q = pts if self_query else jnp.asarray(queries, jnp.float32)
 
-        index = self._index
-        if pts.shape != index.points.shape:
-            # particle count changed under the frozen spec: re-seat the
-            # leaves; the displacement statistic restarts from here
-            index = dataclasses.replace(index, points=pts, anchor_points=pts)
-            self._plan = None
+            with obs.span("plan"):
+                index = self._index
+                if pts.shape != index.points.shape:
+                    # particle count changed under the frozen spec: re-seat
+                    # the leaves; the displacement statistic restarts here
+                    index = dataclasses.replace(index, points=pts,
+                                                anchor_points=pts)
+                    self._plan = None
 
-        anchor_q = self._anchor_queries
-        # switching between self-query and external queries always replans:
-        # the captured plan is anchored at the other set's positions, which
-        # the displacement statistic does not track
-        force = (self._plan is None
-                 or self._plan.nq != q.shape[0]
-                 or self_query != (anchor_q is None))
-        if self_query:
-            anchor_q = q
-        elif anchor_q is None or anchor_q.shape != q.shape:
-            anchor_q = q
-            force = True
+                anchor_q = self._anchor_queries
+                # switching between self-query and external queries always
+                # replans: the captured plan is anchored at the other set's
+                # positions, which the displacement statistic does not track
+                force = (self._plan is None
+                         or self._plan.nq != q.shape[0]
+                         or self_query != (anchor_q is None))
+                if self_query:
+                    anchor_q = q
+                elif anchor_q is None or anchor_q.shape != q.shape:
+                    anchor_q = q
+                    force = True
 
-        out = self._dispatch(index, pts, q, anchor_q, force, self_query)
-        index3, plan2, anchor_q2, res, flags, stats = out
-        fl = int(flags)      # THE per-step transfer: syncs the fused step
+            out, tel = self._dispatch_synced(index, pts, q, anchor_q,
+                                             force, self_query)
+            index3, plan2, anchor_q2, res, _telem, _stats = out
+            fl = tel["flags"]
 
-        if fl & _FLAG_EXHAUSTED:
-            # rare path: fetch the full stats for the report/raise, then
-            # respec-and-rebuild on the host and re-execute for exactness
-            overflow, oob = int(stats.overflow), int(stats.oob)
-            self._counters["stats_fetches"] += 1
-            rep.overflow, rep.oob = overflow, oob
-            rep.max_disp = math.sqrt(max(float(stats.max_disp2), 0.0))
-            if not self.sopts.auto_respec:
-                # keep the session consistent (updated grid, dropped plan)
-                # before raising
-                self._index = index3
-                self._plan = None
-                self._anchor_queries = None if self_query else anchor_q2
-                raise RuntimeError(
-                    f"frozen grid exhausted (overflow={overflow}, "
-                    f"out_of_bounds={oob}) and auto_respec is disabled")
-            # respec hysteresis: each respec plans with geometrically more
-            # capacity/margin headroom, so an adversarial pile-up or
-            # escapee costs O(log frames) respecs, not one per frame
-            self._counters["respecs"] += 1
-            boost = min(
-                float(self.sopts.respec_growth)
-                ** int(self._counters["respecs"]),
-                float(self.sopts.respec_boost_max))
-            spec = session_grid_spec(
-                np.asarray(jax.device_get(pts)), index.params.radius,
-                self.sopts, boost=boost)
-            index = api.build_index(pts, index.params, index.opts, spec=spec)
-            # release every step variant compiled against the old spec
-            # (the new-spec trace replaces them; the analogue of the
-            # executor path's invalidate())
-            self._step_fn.clear_cache()
-            rep.respecced = True
-            out = self._dispatch(index, pts, q, anchor_q, True, self_query)
-            index3, plan2, anchor_q2, res, flags, stats = out
-            fl = int(flags)
-            if fl & _FLAG_EXHAUSTED:        # pragma: no cover
-                raise RuntimeError(
-                    f"respec failed to absorb the scene (overflow="
-                    f"{int(stats.overflow)}, oob={int(stats.oob)})")
+            if fl & _FLAG_EXHAUSTED:
+                # rare path: the packed telemetry already carries the
+                # counters (no extra stats fetch — stats_fetches stays 0
+                # even here); respec-and-rebuild on the host and re-execute
+                # so results stay exact
+                rep.overflow, rep.oob = tel["overflow"], tel["oob"]
+                rep.max_disp = math.sqrt(max(tel["max_disp2"], 0.0))
+                if not self.sopts.auto_respec:
+                    # keep the session consistent (updated grid, dropped
+                    # plan) before raising
+                    self._index = index3
+                    self._plan = None
+                    self._anchor_queries = None if self_query else anchor_q2
+                    raise RuntimeError(
+                        f"frozen grid exhausted (overflow={rep.overflow}, "
+                        f"out_of_bounds={rep.oob}) and auto_respec is "
+                        f"disabled")
+                # respec hysteresis: each respec plans with geometrically
+                # more capacity/margin headroom, so an adversarial pile-up
+                # or escapee costs O(log frames) respecs, not one per frame
+                respecs = m.count("respecs")
+                boost = min(
+                    float(self.sopts.respec_growth) ** int(respecs),
+                    float(self.sopts.respec_boost_max))
+                spec = session_grid_spec(
+                    np.asarray(jax.device_get(pts)), index.params.radius,
+                    self.sopts, boost=boost)
+                index = api.build_index(pts, index.params, index.opts,
+                                        spec=spec)
+                # release every step variant compiled against the old spec
+                # (the new-spec trace replaces them; the analogue of the
+                # executor path's invalidate())
+                self._step_fn.clear_cache()
+                rep.respecced = True
+                out, tel = self._dispatch_synced(index, pts, q, anchor_q,
+                                                 True, self_query)
+                index3, plan2, anchor_q2, res, _telem, _stats = out
+                fl = tel["flags"]
+                if fl & _FLAG_EXHAUSTED:        # pragma: no cover
+                    raise RuntimeError(
+                        f"respec failed to absorb the scene (overflow="
+                        f"{tel['overflow']}, oob={tel['oob']})")
 
-        self._index = index3
-        self._plan = plan2
-        self._anchor_queries = None if self_query else anchor_q2
-        if fl & _FLAG_REPLANNED:
-            rep.replanned = True
-            self._counters["replans"] += 1
-        else:
-            rep.fast = True
-            self._counters["fast_steps"] += 1
-        rep.t_search = time.perf_counter() - t0
-        self._counters["steps"] += 1
+            self._index = index3
+            self._plan = plan2
+            self._anchor_queries = None if self_query else anchor_q2
+            if not rep.respecced:
+                # (the respec path keeps the PRE-respec counters: the
+                # post-respec re-execution is clean by construction)
+                rep.overflow, rep.oob = tel["overflow"], tel["oob"]
+                rep.max_disp = math.sqrt(max(tel["max_disp2"], 0.0))
+            if fl & _FLAG_REPLANNED:
+                rep.replanned = True
+                m.count("replans")
+            else:
+                rep.fast = True
+                m.count("fast_steps")
+            m.count("steps")
+            m.count("overflow_points", tel["overflow"])
+            m.count("oob_points", tel["oob"])
+            for lvl, occ in enumerate(tel["occupancy"]):
+                m.count(f"level_occ_{lvl}", occ)
+            m.gauge("staleness_disp2", tel["max_disp2"])
+            m.gauge("step_cache_size", int(self._step_fn._cache_size()))
+        rep.t_search = sp_step.duration
+        m.observe("step_s", rep.t_search)
         self.report = rep
         return res

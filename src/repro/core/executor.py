@@ -40,6 +40,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from .bundle import bundle_query_sel
 from .partition import (PartitionPlan, compute_megacells,
                         inflate_plan_inputs, plan_partitions, trivial_plan)
@@ -115,7 +116,9 @@ class QueryExecutor:
         self._launcher_cache: collections.OrderedDict = \
             collections.OrderedDict()
         self._signatures: set = set()
-        self._totals = collections.Counter()
+        # the totals live in the unified registry (repro.obs): counters for
+        # the caching/sync contract, histograms for latency percentiles
+        self._metrics = obs.metric_set("executor")
         self._last: dict = {}
 
     # -- planning -----------------------------------------------------------
@@ -183,17 +186,19 @@ class QueryExecutor:
         self._last = collections.Counter()    # scratch for _plan's counters
         queries = jnp.asarray(queries, jnp.float32)
         nq = queries.shape[0]
-        if not ns.opts.schedule:
-            perm = jnp.arange(nq, dtype=jnp.int32)
-        elif qcells_dev is not None:
-            perm, _ = schedule_cells(qcells_dev)
-        else:
-            perm, _ = ns._schedule(queries)
-        queries_s = queries[perm]
-        plan, bundles, groups = self._plan(queries_s, margin=margin)
-        sels_dev = self._prepare_launch(groups)
-        self._totals["plan_fetches"] += self._last["plan_fetches"]
-        self._totals["plan_captures"] += 1
+        with obs.span("plan", capture=True, nq=nq, margin=margin) as sp:
+            if not ns.opts.schedule:
+                perm = jnp.arange(nq, dtype=jnp.int32)
+            elif qcells_dev is not None:
+                perm, _ = schedule_cells(qcells_dev)
+            else:
+                perm, _ = ns._schedule(queries)
+            queries_s = queries[perm]
+            plan, bundles, groups = self._plan(queries_s, margin=margin)
+            sels_dev = self._prepare_launch(groups)
+        self._metrics.count("plan_fetches", self._last["plan_fetches"])
+        self._metrics.count("plan_captures")
+        self._metrics.observe("plan_s", sp.duration)
         return PlanHandle(perm=perm, plan=plan, bundles=bundles,
                           groups=groups, sels_dev=sels_dev, nq=nq,
                           margin=margin)
@@ -248,6 +253,7 @@ class QueryExecutor:
         launcher = self._launcher_cache.get(key)
         if launcher is not None:
             self._launcher_cache.move_to_end(key)
+            self._last["launcher_cache_hit"] = True
             return launcher
         self._last["compilations"] += 1
         searcher = ns._searcher()
@@ -290,58 +296,79 @@ class QueryExecutor:
         ns = self.ns
         self._last = dict(host_syncs=0, plan_fetches=0, launches=0,
                           dispatches=0, compilations=0, bundles=0,
-                          plan_cache_hit=False, plan_reused=False)
-        t0 = time.perf_counter()
+                          plan_cache_hit=False, plan_reused=False,
+                          launcher_cache_hit=False)
         queries = jnp.asarray(queries, jnp.float32)
         nq = queries.shape[0]
         k = ns.params.k
 
-        if reuse is not None:
-            if reuse.nq != nq:
-                raise ValueError(f"reused plan was captured for nq="
-                                 f"{reuse.nq}, got {nq} queries")
-            perm = reuse.perm
-            queries_s = queries[perm]
-            plan, bundles, groups = reuse.plan, reuse.bundles, reuse.groups
-            sels_dev = reuse.sels_dev
-            self._last["plan_reused"] = True
-        else:
-            perm, _inv = ns._schedule(queries)
-            queries_s = queries[perm]
-            plan, bundles, groups = self._plan(queries_s)
-            sels_dev = self._prepare_launch(groups)
-        ns.report.t_opt = time.perf_counter() - t0
-        ns.report.num_partitions = plan.num_partitions
-        ns.report.bundles = bundles
-        self._last["bundles"] = len(bundles)
-        self._last["launches"] = len(groups)
+        with obs.span("query", nq=nq) as sp_query:
+            with obs.span("plan", reused=reuse is not None) as sp_plan:
+                if reuse is not None:
+                    if reuse.nq != nq:
+                        raise ValueError(f"reused plan was captured for nq="
+                                         f"{reuse.nq}, got {nq} queries")
+                    perm = reuse.perm
+                    queries_s = queries[perm]
+                    plan, bundles, groups = (reuse.plan, reuse.bundles,
+                                             reuse.groups)
+                    sels_dev = reuse.sels_dev
+                    self._last["plan_reused"] = True
+                else:
+                    perm, _inv = ns._schedule(queries)
+                    queries_s = queries[perm]
+                    plan, bundles, groups = self._plan(queries_s)
+                    sels_dev = self._prepare_launch(groups)
+            ns.report.t_opt = sp_plan.duration
+            ns.report.num_partitions = plan.num_partitions
+            ns.report.bundles = bundles
+            self._last["bundles"] = len(bundles)
+            self._last["launches"] = len(groups)
 
-        t0 = time.perf_counter()
-        launcher = self._get_launcher(groups, nq)
-        # selections are edge-padded to their buckets so the launcher only
-        # ever sees bucketed shapes (zero retraces on count drift); the
-        # freshly-initialized output buffers are donated into the program
-        out_idx, out_d2, out_cnt = launcher(
-            ns.grid, ns.points, queries_s, perm, sels_dev,
-            jnp.full((nq, k), -1, jnp.int32),
-            jnp.full((nq, k), jnp.inf, jnp.float32),
-            jnp.zeros((nq,), jnp.int32))
-        self._last["dispatches"] = 1
+            t0 = time.perf_counter()
+            with obs.span("launch", groups=len(groups)):
+                launcher = self._get_launcher(groups, nq)
+                # selections are edge-padded to their buckets so the
+                # launcher only ever sees bucketed shapes (zero retraces on
+                # count drift); the freshly-initialized output buffers are
+                # donated into the program
+                t_disp = time.perf_counter()
+                out_idx, out_d2, out_cnt = launcher(
+                    ns.grid, ns.points, queries_s, perm, sels_dev,
+                    jnp.full((nq, k), -1, jnp.int32),
+                    jnp.full((nq, k), jnp.inf, jnp.float32),
+                    jnp.zeros((nq,), jnp.int32))
+                if self._last["compilations"]:
+                    # the jit compile happened inside that first dispatch
+                    obs.record_span("compile",
+                                    time.perf_counter() - t_disp)
+            self._last["dispatches"] = 1
 
-        # one-sync contract: the single blocking materialization
-        jax.block_until_ready((out_idx, out_d2, out_cnt))
-        self._last["host_syncs"] += 1
-        ns.report.t_search = time.perf_counter() - t0
+            # one-sync contract: the single blocking materialization
+            with obs.span("sync"):
+                jax.block_until_ready((out_idx, out_d2, out_cnt))
+            self._last["host_syncs"] += 1
+            ns.report.t_search = time.perf_counter() - t0
         ns.report.launches = self._last["launches"]
         ns.report.host_syncs = self._last["host_syncs"]
         ns.report.plan_fetches = self._last["plan_fetches"]
 
-        self._totals["queries"] += 1
+        m = self._metrics
+        m.count("queries")
         for key in ("launches", "dispatches", "bundles", "host_syncs",
                     "plan_fetches", "compilations"):
-            self._totals[key] += self._last[key]
-        self._totals["plan_cache_hits"] += int(self._last["plan_cache_hit"])
-        self._totals["plan_reuses"] += int(self._last["plan_reused"])
+            m.count(key, self._last[key])
+        m.count("plan_cache_hits", int(self._last["plan_cache_hit"]))
+        m.count("plan_cache_misses",
+                int(not (self._last["plan_cache_hit"]
+                         or self._last["plan_reused"])))
+        m.count("plan_reuses", int(self._last["plan_reused"]))
+        m.count("launcher_cache_hits", int(self._last["launcher_cache_hit"]))
+        m.count("launcher_cache_misses", self._last["compilations"])
+        m.observe("query_s", sp_query.duration)
+        m.observe("plan_s", ns.report.t_opt)
+        m.gauge("plan_cache_entries", len(self._plan_cache))
+        m.gauge("launcher_cache_entries", len(self._launcher_cache))
 
         return SearchResult(indices=out_idx, distances2=out_d2,
                             counts=out_cnt)
@@ -357,7 +384,7 @@ class QueryExecutor:
         self._plan_cache.clear()
         self._launcher_cache.clear()
         self._signatures.clear()
-        self._totals["invalidations"] += 1
+        self._metrics.count("invalidations")
 
     # -- surface ------------------------------------------------------------
 
@@ -389,7 +416,7 @@ class QueryExecutor:
             except AttributeError:                  # pragma: no cover
                 pass
         return {
-            **{k: int(v) for k, v in self._totals.items()},
+            **self._metrics.counters(),
             "last": dict(self._last),
             "signatures": len(self._signatures),
             "plan_cache_entries": len(self._plan_cache),

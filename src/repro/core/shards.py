@@ -65,6 +65,7 @@ else:
     from jax.experimental.shard_map import shard_map as _shard_map
     _SHARD_MAP_KW = {"check_rep": False}
 
+from .. import obs
 from . import api
 from .dynamic import SessionOpts, validate_session_opts
 from .types import (PARK_SENTINEL, Array, GridSpec, SearchOpts, SearchParams,
@@ -688,10 +689,23 @@ def _local_step_fn(layout: SlabLayout, params: SearchParams,
         cnt = jnp.sum((gidx >= 0).astype(jnp.int32), axis=-1)
         flags = (stale.astype(jnp.int32) * _FLAG_REPLANNED
                  + bad.astype(jnp.int32) * _FLAG_EXHAUSTED)
+        # per-slab telemetry, split by cross-slab reduction: tel_i slot 0
+        # (flags) reduces by max, the rest by sum — overflow, oob, rows
+        # migrated this step, halo volume (occupied halo rows received),
+        # and the per-ladder-level occupancy histogram. tel_f is the
+        # max-reduced staleness statistic. step_prog reduces + packs them
+        # into the ONE per-step transfer (obs/device.py).
+        halo_vol = jnp.sum((all_i[pts2.shape[0]:] >= 0).astype(jnp.int32))
+        occ = obs.level_occupancy(plan2.tile_levels, len(plan2.ladder))
+        tel_i = jnp.concatenate([
+            jnp.stack([flags, stats.overflow.astype(jnp.int32),
+                       stats.oob.astype(jnp.int32),
+                       n_mig.astype(jnp.int32), halo_vol]), occ])
+        tel_f = stats.max_disp2.reshape(1)
         out_state = jax.tree.map(lambda x: x[None],
                                  (index3, plan2, mig_total + n_mig))
         return (pts2[None], ids2[None], *out_state, gidx[None], d2[None],
-                cnt[None], flags[None])
+                cnt[None], tel_i[None], tel_f[None])
 
     return local_fn
 
@@ -735,7 +749,9 @@ class ShardedSession:
         self.sopts = sopts
         self.shopts = shopts
         self._boost = 1.0
-        self._counters = collections.Counter()
+        # lifecycle counters + step-latency histogram in the unified
+        # registry (repro.obs)
+        self._metrics = obs.metric_set("sharded_session")
         self.last_flags = 0
         self._t_last = 0.0
         pts_np = np.asarray(jax.device_get(jnp.asarray(points,
@@ -755,8 +771,8 @@ class ShardedSession:
 
     def stats(self) -> dict:
         counters = dict(steps=0, fast_steps=0, replans=0, reroutes=0,
-                        host_routings=0)
-        counters.update({k: int(v) for k, v in self._counters.items()})
+                        host_routings=0, host_syncs=0)
+        counters.update(self._metrics.counters())
         return {
             **counters,
             "migrated": int(jnp.sum(self._mig_total)),
@@ -773,7 +789,7 @@ class ShardedSession:
         recapture the per-slab plans. The ONLY host routing in the
         session's life — counted, and asserted zero across steady-state
         steps in the tests."""
-        self._counters["host_routings"] += 1
+        self._metrics.count("host_routings")
         layout = plan_layout(pts_np, self.params, self._n_slabs,
                              shopts=self.shopts, boost=self._boost)
         self._layout = layout
@@ -797,17 +813,25 @@ class ShardedSession:
         step_inner = _shard_map(
             local, mesh=self._mesh,
             in_specs=(P(ax), P(ax), P(ax), P(ax), P(ax), P()),
-            out_specs=(P(ax),) * 9, **_SHARD_MAP_KW)
+            out_specs=(P(ax),) * 10, **_SHARD_MAP_KW)
         n = self._n
 
         def step_prog(pts, ids, index, plan, mig_total, pg):
             out = step_inner(pts, ids, index, plan, mig_total, pg)
-            pts2, ids2, index3, plan2, mig2, gidx, d2, cnt, flags = out
+            (pts2, ids2, index3, plan2, mig2, gidx, d2, cnt,
+             tel_i, tel_f) = out
             # owned rows ARE the self-queries, so their global ids are the
             # routing ids and the one-shot inverse scatter applies as-is
             oi, od, oc = unroute_results(ids2, gidx, d2, cnt, n)
-            return (pts2, ids2, index3, plan2, mig2, oi, od, oc,
-                    jnp.max(flags))
+            # reduce the per-slab telemetry (slot-wise: flags by max, the
+            # counters by sum, staleness by max) and pack the one per-step
+            # transfer
+            sums = jnp.sum(tel_i[:, 1:], axis=0)
+            telem = obs.pack_step_telemetry(
+                jnp.max(tel_i[:, 0]), overflow=sums[0], oob=sums[1],
+                max_disp2=jnp.max(tel_f), occupancy=sums[4:],
+                migrated=sums[2], halo=sums[3])
+            return (pts2, ids2, index3, plan2, mig2, oi, od, oc, telem)
 
         # per-reroute jit: a re-route changes the (static) layout, so the
         # old variants are released with the old program
@@ -815,48 +839,78 @@ class ShardedSession:
 
     def step(self, points) -> SearchResult:
         """Advance every slab to the frame ``points`` [N, 3] (global id
-        order) and self-query. One fused device program; the flags scalar
-        is the only per-step host transfer."""
-        t0 = time.perf_counter()
-        pg = jnp.asarray(points, jnp.float32)
-        if pg.shape != (self._n, 3):
-            # particle count changed: the layout's static caps are stale
-            self._n = int(pg.shape[0])
-            self._reroute(np.asarray(jax.device_get(pg)))
-        out = self._dispatch(pg)
-        fl = int(out[-1])          # THE per-step sync
+        order) and self-query. One fused device program; the packed
+        telemetry vector (flags + device counters, obs/device.py) is the
+        only per-step host transfer."""
+        m = self._metrics
+        with obs.span("step", slabs=self._n_slabs) as sp_step:
+            pg = jnp.asarray(points, jnp.float32)
+            with obs.span("plan"):
+                if pg.shape != (self._n, 3):
+                    # particle count changed: the layout's static caps are
+                    # stale
+                    self._n = int(pg.shape[0])
+                    self._reroute(np.asarray(jax.device_get(pg)))
+            out, tel = self._dispatch_synced(pg)
+            fl = tel["flags"]
 
-        if fl & _FLAG_EXHAUSTED:
-            if not self.shopts.auto_reroute:
-                raise RuntimeError(
-                    "sharded layout exhausted (migration/halo/capacity/"
-                    "bounds) and auto_reroute is disabled")
-            # respec-style fallback with hysteresis: geometrically more
-            # headroom per re-route, so adversarial drift costs O(log
-            # frames) re-routes
-            self._counters["reroutes"] += 1
-            self._boost = min(self._boost * self.shopts.reroute_growth,
-                              self.shopts.reroute_boost_max)
-            self._reroute(np.asarray(jax.device_get(pg)))
-            out = self._dispatch(pg)
-            fl = int(out[-1])
-            if fl & _FLAG_EXHAUSTED:        # pragma: no cover
-                raise RuntimeError("re-route failed to absorb the scene")
+            if fl & _FLAG_EXHAUSTED:
+                if not self.shopts.auto_reroute:
+                    raise RuntimeError(
+                        "sharded layout exhausted (migration/halo/capacity/"
+                        "bounds) and auto_reroute is disabled")
+                # respec-style fallback with hysteresis: geometrically more
+                # headroom per re-route, so adversarial drift costs O(log
+                # frames) re-routes
+                m.count("reroutes")
+                self._boost = min(self._boost * self.shopts.reroute_growth,
+                                  self.shopts.reroute_boost_max)
+                self._reroute(np.asarray(jax.device_get(pg)))
+                out, tel = self._dispatch_synced(pg)
+                fl = tel["flags"]
+                if fl & _FLAG_EXHAUSTED:        # pragma: no cover
+                    raise RuntimeError(
+                        "re-route failed to absorb the scene")
 
-        (self._pts, self._ids, self._index, self._plan, self._mig_total,
-         oi, od, oc, _flags) = out
-        self.last_flags = fl
-        self._counters["steps"] += 1
-        if fl & _FLAG_REPLANNED:
-            self._counters["replans"] += 1
-        else:
-            self._counters["fast_steps"] += 1
-        self._t_last = time.perf_counter() - t0
+            (self._pts, self._ids, self._index, self._plan,
+             self._mig_total, oi, od, oc, _telem) = out
+            self.last_flags = fl
+            m.count("steps")
+            if fl & _FLAG_REPLANNED:
+                m.count("replans")
+            else:
+                m.count("fast_steps")
+            m.count("migrated_rows", tel["migrated"])
+            m.count("halo_rows", tel["halo"])
+            m.count("overflow_points", tel["overflow"])
+            m.count("oob_points", tel["oob"])
+            for lvl, occ in enumerate(tel["occupancy"]):
+                m.count(f"level_occ_{lvl}", occ)
+            m.gauge("staleness_disp2", tel["max_disp2"])
+            m.gauge("boost", self._boost)
+        self._t_last = sp_step.duration
+        m.observe("step_s", self._t_last)
         return SearchResult(indices=oi, distances2=od, counts=oc)
 
     def _dispatch(self, pg):
         return self._step_fn(self._pts, self._ids, self._index,
                              self._plan, self._mig_total, pg)
+
+    def _dispatch_synced(self, pg):
+        """Launch the fused sharded step and fetch the packed telemetry
+        vector — still ONE blocking transfer per step; a jit compile is
+        detected from step-cache growth and recorded as a compile span."""
+        cache0 = int(self._step_fn._cache_size())
+        with obs.span("launch"):
+            t0 = time.perf_counter()
+            out = self._dispatch(pg)
+            if int(self._step_fn._cache_size()) > cache0:
+                obs.record_span("compile", time.perf_counter() - t0)
+        with obs.span("sync"):
+            tel = obs.unpack_step_telemetry(
+                np.asarray(jax.device_get(out[-1])))
+        self._metrics.count("host_syncs")
+        return out, tel
 
 
 __all__ = [

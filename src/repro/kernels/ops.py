@@ -178,8 +178,10 @@ def window_search_segmented(
         # escalation rungs exist for totality): skip their launches at
         # runtime with shapes still static. Under vmap the cond lowers to
         # select-and-execute-both — no worse than the unconditional launch
-        out_d2, out_idx = jax.lax.cond(
-            jnp.any(plevel == e), _launch, lambda c: c, (out_d2, out_idx))
+        with jax.named_scope(f"repro.launch.level{e}_w{ws}"):
+            out_d2, out_idx = jax.lax.cond(
+                jnp.any(plevel == e), _launch, lambda c: c,
+                (out_d2, out_idx))
     cnt = jnp.sum((out_idx >= 0).astype(jnp.int32), axis=1)
     return out_d2, out_idx, cnt
 

@@ -6,7 +6,6 @@
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +21,7 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
+    from repro import obs
     from repro.configs import smoke_config
     from repro.models.config import get_config
     from repro.models.model import init_params
@@ -35,13 +35,28 @@ def main():
     prompts = jax.random.randint(
         key, (args.requests, args.prompt_len), 0, cfg.vocab, jnp.int32)
     cache_len = args.prompt_len + args.max_new + 1
-    t0 = time.perf_counter()
-    out = greedy_generate(params, cfg, prompts, args.max_new, cache_len)
-    dt = time.perf_counter() - t0
     n_tok = args.requests * args.max_new
-    print(f"arch={cfg.name} generated {out.shape} tokens "
-          f"({n_tok / dt:.1f} tok/s incl. compile)")
+    metrics = obs.metric_set("serve")
+
+    # warmup pass: pays tracing + XLA compilation (and is reported as
+    # such); the second identical-shape call hits the jit cache, so its
+    # timing is the steady-state serving throughput
+    with obs.span("warmup", arch=cfg.name) as sp_warm:
+        out = jax.block_until_ready(
+            greedy_generate(params, cfg, prompts, args.max_new, cache_len))
+    with obs.span("generate", arch=cfg.name) as sp_gen:
+        out = jax.block_until_ready(
+            greedy_generate(params, cfg, prompts, args.max_new, cache_len))
+    metrics.observe("warmup_s", sp_warm.duration)
+    metrics.observe("generate_s", sp_gen.duration)
+    metrics.count("tokens", 2 * n_tok)
+    print(f"arch={cfg.name} generated {out.shape} tokens: "
+          f"{n_tok / sp_gen.duration:.1f} tok/s steady-state, "
+          f"{n_tok / sp_warm.duration:.1f} tok/s incl. compile "
+          f"(warmup {sp_warm.duration:.2f}s)")
     print(out[:, :16])
+    if obs.trace_enabled():
+        print(obs.summary())
 
 
 if __name__ == "__main__":

@@ -1,0 +1,42 @@
+"""repro.obs — unified telemetry: metrics registry, span tracing,
+device-resident counters (DESIGN.md section 9).
+
+Quickstart::
+
+    import os; os.environ["REPRO_TRACE"] = "1"
+    import repro.obs as obs
+    obs.configure()                    # pick up the knob (or pass mode=)
+    ... run queries / session steps ...
+    print(obs.summary())               # unified text table
+    obs.export_jsonl("telemetry.jsonl")  # spans + metrics, one JSON/line
+"""
+from .registry import (REGISTRY, Counter, Gauge, Histogram,  # noqa: F401
+                       MetricSet, Registry)
+from .tracing import (configure, export_jsonl, recent_spans,  # noqa: F401
+                      record_span, span, trace_enabled, trace_mode,
+                      trace_path)
+from .device import (TELEM_HEADER, level_occupancy,  # noqa: F401
+                     pack_step_telemetry, unpack_step_telemetry)
+
+
+def metric_set(component: str) -> MetricSet:
+    """New instance-scoped MetricSet registered with the global registry."""
+    return REGISTRY.metric_set(component)
+
+
+def summary() -> str:
+    """Text table of every metric in the global registry."""
+    return REGISTRY.summary()
+
+
+def metrics_dict() -> dict:
+    """The unified metric schema ({"schema": "repro.obs/v1", "metrics":
+    [...]}) consumed by benchmarks/ and scripts/check_bench.py."""
+    return REGISTRY.metrics_dict()
+
+
+def reset() -> None:
+    """Clear the global registry and the span ring buffer (tests)."""
+    from . import tracing
+    REGISTRY.reset()
+    tracing.reset()

@@ -1,0 +1,96 @@
+"""Device-resident telemetry counters (DESIGN.md section 9).
+
+The sessions' one-host-sync-per-step contract (DESIGN.md sections 6/7)
+says the ONLY per-step blocking transfer is a single packed scalar of
+control flags. Telemetry must not add a second sync — so instead of
+fetching counters separately, the step programs pack them INTO that one
+transfer: the flags scalar widens to a small int32 vector
+
+    [flags, overflow, oob, disp_bits, migrated, halo,
+     occ_0, ..., occ_{L-1}]
+
+where ``disp_bits`` is the f32 max-squared-displacement bitcast to int32
+(lossless; unpacked host-side with a view), and ``occ_i`` counts query
+tiles landing on ladder level ``i`` this step — the escalation-occupancy
+histogram that tells the autotuner whether the ladder is sized right.
+``migrated`` / ``halo`` are populated by the sharded session (zero for
+single-device sessions).
+
+One ``device_get`` of this vector is still exactly one host sync; the
+host_syncs counter is unchanged, asserted by tests/test_obs.py. The
+vector is computed unconditionally inside the traced step (a handful of
+scalar ops — negligible next to the search itself), so the jaxpr is
+identical whether host-side telemetry recording is on or off.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+# header slots before the per-level occupancy tail
+TELEM_FLAGS = 0
+TELEM_OVERFLOW = 1
+TELEM_OOB = 2
+TELEM_DISP_BITS = 3
+TELEM_MIGRATED = 4
+TELEM_HALO = 5
+TELEM_HEADER = 6
+
+
+def level_occupancy(tile_levels: Array, n_levels: int) -> Array:
+    """Per-ladder-level query-tile occupancy histogram [n_levels] int32.
+
+    ``tile_levels`` is the plan's per-tile escalation level (core/api.py);
+    the histogram is the device-side view of how the launch ladder is
+    being used — all-tail means the ladder is too short, all-head means
+    the windows are oversized.
+    """
+    return jnp.bincount(tile_levels.astype(jnp.int32).reshape(-1),
+                        length=n_levels).astype(jnp.int32)
+
+
+def pack_step_telemetry(flags: Array, *, overflow: Array, oob: Array,
+                        max_disp2: Array, occupancy: Array,
+                        migrated: Array | None = None,
+                        halo: Array | None = None) -> Array:
+    """Pack per-step counters into one int32 vector [TELEM_HEADER + L].
+
+    Traced inside the step program; every argument is a scalar int32/f32
+    device value except ``occupancy`` [L] int32.
+    """
+    i32 = jnp.int32
+    zero = jnp.zeros((), i32)
+    disp_bits = jax.lax.bitcast_convert_type(
+        jnp.asarray(max_disp2, jnp.float32).reshape(()), i32)
+    head = jnp.stack([
+        jnp.asarray(flags, i32).reshape(()),
+        jnp.asarray(overflow, i32).reshape(()),
+        jnp.asarray(oob, i32).reshape(()),
+        disp_bits,
+        zero if migrated is None else jnp.asarray(migrated, i32).reshape(()),
+        zero if halo is None else jnp.asarray(halo, i32).reshape(()),
+    ])
+    return jnp.concatenate([head, occupancy.astype(i32).reshape(-1)])
+
+
+def unpack_step_telemetry(vec) -> dict:
+    """Host-side unpack of a fetched telemetry vector (np.ndarray or a
+    just-device_get results of pack_step_telemetry).
+
+    Returns plain Python numbers: flags, overflow, oob, max_disp2 (f32
+    recovered from its bit pattern), migrated, halo, and the occupancy
+    list."""
+    v = np.asarray(vec, np.int32).reshape(-1)
+    return {
+        "flags": int(v[TELEM_FLAGS]),
+        "overflow": int(v[TELEM_OVERFLOW]),
+        "oob": int(v[TELEM_OOB]),
+        "max_disp2": float(v[TELEM_DISP_BITS:TELEM_DISP_BITS + 1]
+                           .view(np.float32)[0]),
+        "migrated": int(v[TELEM_MIGRATED]),
+        "halo": int(v[TELEM_HALO]),
+        "occupancy": [int(x) for x in v[TELEM_HEADER:]],
+    }

@@ -1,0 +1,209 @@
+"""Span tracing (DESIGN.md section 9).
+
+``span(name, **attrs)`` is a nestable context manager that measures a
+host-side stage and — always, independent of any knob — enters a
+``jax.profiler.TraceAnnotation`` so the same stage shows up in XLA/perfetto
+profiles. Host-side *recording* is gated by the ``REPRO_TRACE`` env knob
+(DESIGN.md section 4 convention):
+
+* unset / ``0`` / ``off``  — spans are timed-and-dropped (near-zero cost);
+* ``1`` / ``log``          — spans are kept in an in-memory ring buffer
+  (``recent_spans()``) and logged at DEBUG;
+* ``2`` / ``jsonl`` / a path ending in ``.jsonl`` — spans additionally
+  stream to a JSONL file (default ``repro_trace.jsonl``, overridable via
+  ``REPRO_TRACE_PATH`` or by giving the path as the knob value itself).
+
+Span taxonomy (fixed, so dashboards and tests can rely on the names):
+top-level ``query`` (executor) and ``step`` (sessions); children ``plan``,
+``compile``, ``launch``, ``sync``. Nesting is tracked per-thread; a span
+record carries its slash-joined path (``step/launch/compile``).
+
+Crucially, nothing here touches what gets *traced by JAX*: device
+programs are identical with tracing on or off (asserted by
+tests/test_obs.py jaxpr-parity tests). Only host bookkeeping differs.
+"""
+from __future__ import annotations
+
+import collections
+import json
+import logging
+import os
+import threading
+import time
+
+import jax
+
+logger = logging.getLogger("repro.obs")
+
+_RING_MAX = 10_000
+
+_state_lock = threading.Lock()
+_mode = "off"                   # "off" | "log" | "jsonl"
+_path = "repro_trace.jsonl"
+_fh = None                      # lazily-opened JSONL handle
+_ring: collections.deque = collections.deque(maxlen=_RING_MAX)
+_seq = 0
+
+_tls = threading.local()
+
+
+def _parse_knob(val: str | None) -> tuple[str, str | None]:
+    """REPRO_TRACE value -> (mode, path-or-None)."""
+    v = (val or "").strip()
+    if v.lower() in ("", "0", "off", "false", "no"):
+        return "off", None
+    if v.lower() in ("1", "log", "on", "true", "yes"):
+        return "log", None
+    if v.lower() in ("2", "jsonl"):
+        return "jsonl", None
+    if v.endswith(".jsonl"):
+        return "jsonl", v
+    return "log", None
+
+
+def configure(mode: str | None = None, path: str | None = None) -> None:
+    """Set the trace mode/path at runtime (tests, benchmarks). With no
+    arguments, re-reads ``REPRO_TRACE`` / ``REPRO_TRACE_PATH`` from the
+    environment."""
+    global _mode, _path, _fh
+    with _state_lock:
+        if mode is None:
+            mode, knob_path = _parse_knob(os.environ.get("REPRO_TRACE"))
+            path = path or os.environ.get("REPRO_TRACE_PATH") or knob_path
+        if mode not in ("off", "log", "jsonl"):
+            raise ValueError(f"unknown trace mode: {mode!r}")
+        if _fh is not None:
+            _fh.close()
+            _fh = None
+        _mode = mode
+        if path:
+            _path = path
+
+
+def trace_enabled() -> bool:
+    return _mode != "off"
+
+
+def trace_mode() -> str:
+    return _mode
+
+
+def trace_path() -> str:
+    return _path
+
+
+def reset() -> None:
+    """Drop buffered spans (tests). Does not change mode/path."""
+    global _seq
+    with _state_lock:
+        _ring.clear()
+        _seq = 0
+
+
+def recent_spans() -> list:
+    """Recorded span dicts, oldest first (in-memory ring buffer)."""
+    with _state_lock:
+        return list(_ring)
+
+
+def _stack() -> list:
+    st = getattr(_tls, "stack", None)
+    if st is None:
+        st = _tls.stack = []
+    return st
+
+
+def _emit(rec: dict) -> None:
+    global _fh, _seq
+    with _state_lock:
+        _seq += 1
+        rec["seq"] = _seq
+        _ring.append(rec)
+        if _mode == "jsonl":
+            if _fh is None:
+                _fh = open(_path, "a", buffering=1)
+            _fh.write(json.dumps(rec, sort_keys=True) + "\n")
+    if logger.isEnabledFor(logging.DEBUG):
+        logger.debug("span %s %.1fus", rec["path"], rec["dur_s"] * 1e6)
+
+
+def record_span(name: str, dur_s: float, **attrs) -> None:
+    """Record a span retroactively (for stages detected after the fact,
+    e.g. a compile identified from a jit cache-size delta after the launch
+    call returned). Nested under the current thread's open span, if any."""
+    if _mode == "off":
+        return
+    st = _stack()
+    path = "/".join(st + [name])
+    rec = {"type": "span", "name": name, "path": path, "dur_s": dur_s}
+    if attrs:
+        rec["attrs"] = attrs
+    _emit(rec)
+
+
+class span:
+    """``with span("plan", nq=1024) as sp: ...`` — times the block, tags
+    it in the XLA profile, records it per REPRO_TRACE. ``sp.duration`` is
+    available after exit; ``sp.set(**attrs)`` adds attributes mid-flight."""
+
+    __slots__ = ("name", "attrs", "duration", "_t0", "_ann", "_path")
+
+    def __init__(self, name: str, **attrs):
+        self.name = name
+        self.attrs = attrs
+        self.duration = 0.0
+        self._t0 = 0.0
+        self._ann = None
+        self._path = name
+
+    def set(self, **attrs):
+        self.attrs.update(attrs)
+
+    def __enter__(self):
+        st = _stack()
+        self._path = "/".join(st + [self.name])
+        st.append(self.name)
+        # always annotate: profiler visibility must not depend on the
+        # host-recording knob, and TraceAnnotation is ~free when no
+        # profiler is active
+        self._ann = jax.profiler.TraceAnnotation(self.name)
+        self._ann.__enter__()
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.duration = time.perf_counter() - self._t0
+        self._ann.__exit__(*exc)
+        st = _stack()
+        if st and st[-1] == self.name:
+            st.pop()
+        if _mode != "off":
+            rec = {"type": "span", "name": self.name, "path": self._path,
+                   "dur_s": self.duration}
+            if self.attrs:
+                rec["attrs"] = {k: (v if isinstance(v, (int, float, str,
+                                                        bool, type(None)))
+                                    else str(v))
+                                for k, v in self.attrs.items()}
+            _emit(rec)
+        return False
+
+
+def export_jsonl(path: str | None = None, registry=None) -> str:
+    """Dump buffered spans plus the aggregated metric registry as JSONL.
+
+    One ``{"type": "span", ...}`` line per buffered span and one
+    ``{"type": "metric", ...}`` line per aggregated metric. Returns the
+    path written."""
+    from .registry import REGISTRY
+    reg = registry if registry is not None else REGISTRY
+    out = path or _path
+    with open(out, "a", buffering=1) as fh:
+        for rec in recent_spans():
+            fh.write(json.dumps(rec, sort_keys=True) + "\n")
+        reg.export_metrics_jsonl(fh)
+    return out
+
+
+# pick up the env knob at import so `REPRO_TRACE=1 pytest` just works
+configure()

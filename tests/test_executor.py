@@ -184,3 +184,59 @@ def test_capture_plan_replay_matches_direct_query(rng):
                                   np.asarray(res_d.counts))
     last = ns.executor.stats()["last"]
     assert last["plan_reused"] and last["plan_fetches"] == 0
+
+
+def test_cache_hit_miss_accounting(rng):
+    """The unified-registry counters tell the full plan/compile cache
+    story: misses on first sight, hits on repeats, a fresh shape is a new
+    miss, and invalidate() starts the count again from cold."""
+    pts = rng.random((1500, 3)).astype(np.float32)
+    qs = rng.random((384, 3)).astype(np.float32)
+    ns = NeighborSearch(pts, SearchParams(radius=0.1, k=8), SearchOpts())
+    ex = ns.executor
+
+    ns.query(qs)                       # cold: both caches miss
+    st = ex.stats()
+    assert st["plan_cache_misses"] == 1 and st["plan_cache_hits"] == 0
+    assert st["launcher_cache_misses"] == 1
+    assert st["launcher_cache_hits"] == 0
+
+    ns.query(qs)                       # repeat: both caches hit
+    st = ex.stats()
+    assert st["plan_cache_hits"] == 1 and st["plan_cache_misses"] == 1
+    assert st["launcher_cache_hits"] == 1
+    assert st["launcher_cache_misses"] == 1
+    assert st["last"]["plan_cache_hit"]
+    assert st["last"]["launcher_cache_hit"]
+
+    qs2 = rng.random((512, 3)).astype(np.float32)
+    ns.query(qs2)                      # new shape: new plan, new launcher
+    st = ex.stats()
+    assert st["plan_cache_misses"] == 2
+    assert st["launcher_cache_misses"] == 2
+    assert not st["last"]["plan_cache_hit"]
+
+    ex.invalidate()                    # respec analogue: cold again
+    st = ex.stats()
+    assert st["invalidations"] == 1
+    assert st["plan_cache_entries"] == 0
+    assert st["launcher_cache_entries"] == 0
+    ns.query(qs)
+    st = ex.stats()
+    assert st["plan_cache_misses"] == 3
+    assert not st["last"]["plan_cache_hit"]
+
+
+def test_warmup_yields_zero_compile_misses(rng):
+    """warmup() populates both caches: the next same-shape query must see
+    zero compile (launcher) misses and a plan-cache hit."""
+    pts = rng.random((1200, 3)).astype(np.float32)
+    qs = rng.random((256, 3)).astype(np.float32)
+    ns = NeighborSearch(pts, SearchParams(radius=0.1, k=8), SearchOpts())
+    ns.executor.warmup(qs)
+    before = ns.executor.stats()["launcher_cache_misses"]
+    ns.query(qs)
+    st = ns.executor.stats()
+    assert st["launcher_cache_misses"] == before
+    assert st["last"]["compilations"] == 0
+    assert st["last"]["plan_cache_hit"]
