@@ -1,0 +1,162 @@
+"""Serving throughput: signature-bucket micro-batching vs sequential
+per-request calls at matched load (DESIGN.md section 10).
+
+A seeded multi-tenant burst — >= 64 concurrent requests over >= 2 scenes,
+mixed (radius, K) signatures, variable per-request query counts — is
+served two ways against the SAME resident scenes:
+
+* ``sequential``: one ``api.cached_searcher(...).query(...)`` per request
+  in arrival order — the pre-serve baseline, one launch + one host sync
+  per request;
+* ``serve``: everything admitted into ``repro.serve.NeighborService`` and
+  drained — few concatenated launches, one host sync per drained batch.
+
+Both passes run with warm plan/compile caches (a warm-up burst pays the
+compiles; the registry carries the warmed variants into the timed pass),
+and the serve results are asserted bitwise-identical to the sequential
+ones before anything is timed. Rows accumulate in ``BENCH_serve.json``;
+``speedup`` = sequential_time / serve_time is the regression-gated metric
+(acceptance floor: >= 1.3x at the 64-request mixed case).
+
+``REPRO_BENCH_SMOKE=1`` shrinks scene sizes for CI (scripts/ci.sh).
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+import repro.api as api
+from repro.core import SearchParams
+from repro.serve import NeighborService, SceneRegistry, ServeOpts
+
+from .common import emit, write_bench
+
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE", "0") == "1"
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_serve.json")
+
+SIGNATURES = [
+    SearchParams(radius=0.09, k=8, knn_window="exact"),
+    SearchParams(radius=0.13, k=4, knn_window="exact"),
+]
+
+
+def _build_burst(n_scenes: int, n_points: int, n_requests: int, seed: int):
+    """The concurrent request burst: (scene_id, params, queries) with a
+    skewed tenant mix and variable request sizes."""
+    rng = np.random.default_rng(seed)
+    scenes = {f"scene{i}": rng.random((n_points, 3)).astype(np.float32)
+              for i in range(n_scenes)}
+    weights = np.array([1.0 / (i + 1) for i in range(n_scenes)])
+    weights /= weights.sum()
+    ids = list(scenes)
+    burst = []
+    for _ in range(n_requests):
+        sid = ids[int(rng.choice(n_scenes, p=weights))]
+        params = SIGNATURES[int(rng.integers(len(SIGNATURES)))]
+        nq = int(rng.integers(8, 65))
+        burst.append((sid, params,
+                      rng.random((nq, 3)).astype(np.float32)))
+    return scenes, burst
+
+
+def _assert_identical(a, b):
+    assert np.array_equal(np.asarray(a.indices), np.asarray(b.indices))
+    assert np.array_equal(np.asarray(a.counts), np.asarray(b.counts))
+    da = np.where(np.isinf(np.asarray(a.distances2)), -1.0,
+                  np.asarray(a.distances2))
+    db = np.where(np.isinf(np.asarray(b.distances2)), -1.0,
+                  np.asarray(b.distances2))
+    assert np.array_equal(da, db)
+
+
+def _sequential_pass(scenes, burst):
+    out = []
+    for sid, params, q in burst:
+        out.append(api.cached_searcher(scenes[sid], params).query(q))
+    return out
+
+
+def _serve_pass(registry, burst):
+    """One burst through a fresh service over the (already-warm) shared
+    registry: submit everything, drain, return (futures, reports, svc)."""
+    svc = NeighborService(
+        ServeOpts(max_batch=4096, max_pending=1 << 22, pipeline=1),
+        registry=registry)
+    futures = [svc.submit(sid, q, params, now=0.0)
+               for sid, params, q in burst]
+    reports = svc.drain()
+    return futures, reports, svc
+
+
+def run():
+    if SMOKE:
+        # distinct case name: the smoke row must not clobber the committed
+        # full-run row under write_bench's merge-accumulate
+        cases = [("mixed-2x64-smoke", 2, 1500, 64, 3)]
+    else:
+        cases = [
+            ("mixed-2x64", 2, 6000, 64, 5),      # the acceptance gate case
+            ("mixed-4x192", 4, 6000, 192, 3),    # more tenants, deeper burst
+        ]
+    results = {}
+    for name, n_scenes, n_points, n_requests, repeats in cases:
+        scenes, burst = _build_burst(n_scenes, n_points, n_requests,
+                                     seed=11)
+        n = len(burst)
+
+        # -- warm both paths + parity gate (untimed) ------------------------
+        api.searcher_cache_clear()
+        refs = _sequential_pass(scenes, burst)
+        registry = SceneRegistry(capacity=max(n_scenes, 2))
+        svc0 = NeighborService(ServeOpts(max_batch=4096,
+                                         max_pending=1 << 22),
+                               registry=registry)
+        for sid, pts in scenes.items():
+            svc0.register_scene(sid, pts)
+        futures, _, _ = _serve_pass(registry, burst)
+        for fut, ref in zip(futures, refs):
+            _assert_identical(fut.result(), ref)
+
+        # -- timed: interleaved best-of at matched load ---------------------
+        ts_seq, ts_srv = [], []
+        last = None
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            _sequential_pass(scenes, burst)
+            ts_seq.append(time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            last = _serve_pass(registry, burst)
+            ts_srv.append(time.perf_counter() - t0)
+        t_seq, t_srv = min(ts_seq), min(ts_srv)
+
+        _, reports, svc = last
+        st = svc.stats()
+        lat = svc._metrics.snapshot().get("request_s", {})
+        occ = (sum(r.nq for r in reports)
+               / max(sum(r.pad_n for r in reports), 1))
+        row = {
+            "scenes": n_scenes,
+            "requests": n,
+            "sequential_us_per_req": t_seq / n * 1e6,
+            "serve_us_per_req": t_srv / n * 1e6,
+            "sequential_qps": n / t_seq,
+            "serve_qps": n / t_srv,
+            "speedup": t_seq / t_srv,
+            "batches": int(st["batches"]),
+            "host_syncs": int(st["host_syncs"]),
+            "occupancy": occ,
+            "p50_ms": lat.get("p50", 0.0) * 1e3,
+            "p99_ms": lat.get("p99", 0.0) * 1e3,
+        }
+        results[name] = row
+        emit(f"figserve/{name}/sequential", t_seq / n,
+             f"host_syncs={n};qps={row['sequential_qps']:.0f}")
+        emit(f"figserve/{name}/serve", t_srv / n,
+             f"batches={row['batches']};host_syncs={row['host_syncs']};"
+             f"occupancy={occ:.2f};speedup={row['speedup']:.2f}x;"
+             f"p99={row['p99_ms']:.1f}ms")
+
+    return write_bench(OUT_PATH, results)

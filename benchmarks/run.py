@@ -16,6 +16,7 @@ _SUMMARY_COLS = {
     "figbatch": ("sequential_us_per_frame", "vmapped_us_per_frame"),
     "figdyn": ("rebuild_us_per_step", "session_us_per_step"),
     "figshard": ("single_us_per_step", "sharded_us_per_step"),
+    "figserve": ("sequential_us_per_req", "serve_us_per_req"),
 }
 
 
@@ -54,15 +55,16 @@ def main() -> None:
     from . import (fig05_coherence, fig07_aabb_width, fig11_speedup,
                    fig12_breakdown, fig13_ablation, fig14_sensitivity,
                    fig15_build_time, fig16_partition_dist, fig_batch,
-                   fig_dynamic, fig_shard, fig_throughput, roofline)
+                   fig_dynamic, fig_serve, fig_shard, fig_throughput,
+                   roofline)
     modules = {
         "fig05": fig05_coherence, "fig07": fig07_aabb_width,
         "fig11": fig11_speedup, "fig12": fig12_breakdown,
         "fig13": fig13_ablation, "fig14": fig14_sensitivity,
         "fig15": fig15_build_time, "fig16": fig16_partition_dist,
         "figbatch": fig_batch, "figdyn": fig_dynamic,
-        "figshard": fig_shard, "figtp": fig_throughput,
-        "roofline": roofline,
+        "figserve": fig_serve, "figshard": fig_shard,
+        "figtp": fig_throughput, "roofline": roofline,
     }
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")

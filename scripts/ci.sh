@@ -29,17 +29,24 @@ XLA_FLAGS=--xla_force_host_platform_device_count=8 \
 # path is oracle-identical to the host loop and writes BENCH_executor.json)
 REPRO_BENCH_SMOKE=1 python -m benchmarks.run figtp
 
-# smoke the multi-scene batching, dynamic-session, and sharded-session
-# benchmarks (each asserts exactness between its two paths and
+# smoke the multi-scene batching, dynamic-session, sharded-session, and
+# serving benchmarks (each asserts exactness between its two paths and
 # merge-accumulates its BENCH_*.json)
 REPRO_BENCH_SMOKE=1 python -m benchmarks.run figbatch
 REPRO_BENCH_SMOKE=1 python -m benchmarks.run figdyn
 REPRO_BENCH_SMOKE=1 python -m benchmarks.run figshard
+REPRO_BENCH_SMOKE=1 python -m benchmarks.run figserve
 
 # gate: fail if any tracked speedup ratio regressed >10% vs the committed
 # baseline (ratio-gated so machine speed cancels; scripts/check_bench.py)
 python scripts/check_bench.py BENCH_batch.json BENCH_dynamic.json \
-    BENCH_shard.json
+    BENCH_shard.json BENCH_serve.json
+
+# smoke the multi-tenant serving CLI (synthetic trace through the
+# admission queue / micro-batcher), plus once with span recording on so
+# the serve telemetry path cannot change results unnoticed
+python -m repro.launch.serve --smoke
+REPRO_TRACE=1 python -m repro.launch.serve --smoke
 
 # smoke the dynamic-scene session path: the SPH example on the session
 # (and its legacy A/B flag), so the SimulationSession path cannot

@@ -26,8 +26,9 @@ from .schedule import schedule_cells
 from .search import (NeighborSearch, neighbor_search, window_search,
                      window_tile_search)
 from .api import (NeighborIndex, QueryPlan, build_index, cached_searcher,
-                  execute_plan, plan_query, query, update_index)
-from .executor import PlanHandle, QueryExecutor
+                  execute_plan, plan_query, query, query_concat,
+                  update_index)
+from .executor import PendingResult, PlanHandle, QueryExecutor
 from .dynamic import (SessionOpts, SimulationSession, StepReport,
                       session_grid_spec)
 from .shards import (ShardOpts, ShardedIndex, ShardedSession, SlabLayout,
@@ -35,8 +36,9 @@ from .shards import (ShardOpts, ShardedIndex, ShardedSession, SlabLayout,
 
 __all__ = [
     "NeighborIndex", "QueryPlan", "build_index", "cached_searcher",
-    "execute_plan", "plan_query", "query", "update_index",
-    "PlanHandle", "QueryExecutor", "SessionOpts", "SimulationSession",
+    "execute_plan", "plan_query", "query", "query_concat", "update_index",
+    "PendingResult", "PlanHandle", "QueryExecutor", "SessionOpts",
+    "SimulationSession",
     "StepReport", "UpdateStats", "schedule_cells", "session_grid_spec",
     "update_cell_grid", "update_cell_grid_traced",
     "Array", "CellGrid", "GridSpec", "SearchOpts", "SearchParams",

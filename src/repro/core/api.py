@@ -341,6 +341,36 @@ def query(index: NeighborIndex, queries) -> SearchResult:
     return execute_plan(index, queries, plan_query(index, queries))
 
 
+def query_concat(index: NeighborIndex, queries_list) -> list[SearchResult]:
+    """Batch-concat entry point: many requests' queries against one index
+    as ONE ``plan_query`` + ``execute_plan`` launch, split back per request.
+
+    This is the serving layer's drain contract (``repro.serve``,
+    DESIGN.md section 10): B requests sharing a scene and search signature
+    cost one traced program — one schedule/partition pass over the
+    concatenated rows, one launch schedule, one result sync — instead of B.
+    Exactness is per query: each row's launch-ladder level depends only on
+    its own megacell statistics, and a knn query searched at a widened
+    window (a tile it shares with a larger-window neighbor) still returns
+    the identical k-nearest set, so per-request results are bitwise what
+    ``query`` returns for that request alone. Pure and traceable (the
+    split offsets are host-static shapes).
+    """
+    sizes = [q.shape[0] for q in queries_list]
+    if not sizes:
+        return []
+    cat = jnp.concatenate(
+        [jnp.asarray(q, jnp.float32) for q in queries_list], axis=0)
+    res = query(index, cat)
+    out, off = [], 0
+    for n in sizes:
+        out.append(SearchResult(indices=res.indices[off:off + n],
+                                distances2=res.distances2[off:off + n],
+                                counts=res.counts[off:off + n]))
+        off += n
+    return out
+
+
 # ---------------------------------------------------------------------------
 # keyed index cache (one-shot surface)
 # ---------------------------------------------------------------------------
@@ -405,6 +435,7 @@ __all__ = [
     "launch_signatures",
     "plan_query",
     "query",
+    "query_concat",
     "searcher_cache_clear",
     "searcher_cache_stats",
     "update_index",

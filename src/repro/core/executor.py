@@ -100,6 +100,39 @@ class PlanHandle:
         self.margin = margin
 
 
+class PendingResult:
+    """A dispatched-but-unsynced query (``QueryExecutor.execute_async``).
+
+    The launch schedule is already in flight on the device; ``wait()``
+    performs the one-sync-contract blocking materialization (idempotent —
+    repeated calls return the same ``SearchResult``). Letting the caller
+    defer the sync is what enables multi-batch pipelining: stage and
+    dispatch batch N+1 on the host while batch N executes, then wait on
+    N — the serving drain loop's dispatch-then-stage contract
+    (``repro.serve``, DESIGN.md section 10).
+    """
+
+    __slots__ = ("_executor", "_arrays", "_last", "_sp_query", "_t_launch",
+                 "_result")
+
+    def __init__(self, executor, arrays, last, sp_query, t_launch):
+        self._executor = executor
+        self._arrays = arrays
+        self._last = last
+        self._sp_query = sp_query
+        self._t_launch = t_launch
+        self._result: SearchResult | None = None
+
+    def done(self) -> bool:
+        return self._result is not None
+
+    def wait(self) -> SearchResult:
+        if self._result is None:
+            self._result = self._executor._finalize(
+                self._arrays, self._last, self._sp_query, self._t_launch)
+        return self._result
+
+
 class QueryExecutor:
     """Executes a ``NeighborSearch``'s bundle plan device-resident.
 
@@ -293,78 +326,111 @@ class QueryExecutor:
         verbatim — no schedule, no plan fetch, no partition/bundle work, no
         padding: pure device dispatch through the cached compiled launch
         schedule (the dynamic-scene steady state)."""
+        return self.execute_async(queries, reuse=reuse).wait()
+
+    def execute_async(self, queries, *,
+                      reuse: PlanHandle | None = None) -> "PendingResult":
+        """Plan and dispatch one query WITHOUT the blocking result sync.
+
+        Returns a :class:`PendingResult` whose ``wait()`` performs the
+        one-sync materialization. Splitting dispatch from sync lets a
+        streaming caller (the serving drain loop, an SPH stepper over many
+        independent batches) stage batch N+1 on the host while batch N
+        still executes on device — the pipelining the one-sync contract
+        otherwise serializes away. Overlap-safe: every per-call counter
+        rides the pending record, not executor scratch state.
+        """
         ns = self.ns
-        self._last = dict(host_syncs=0, plan_fetches=0, launches=0,
-                          dispatches=0, compilations=0, bundles=0,
-                          plan_cache_hit=False, plan_reused=False,
-                          launcher_cache_hit=False)
+        last = dict(host_syncs=0, plan_fetches=0, launches=0,
+                    dispatches=0, compilations=0, bundles=0,
+                    plan_cache_hit=False, plan_reused=False,
+                    launcher_cache_hit=False)
+        self._last = last
         queries = jnp.asarray(queries, jnp.float32)
         nq = queries.shape[0]
         k = ns.params.k
 
-        with obs.span("query", nq=nq) as sp_query:
-            with obs.span("plan", reused=reuse is not None) as sp_plan:
-                if reuse is not None:
-                    if reuse.nq != nq:
-                        raise ValueError(f"reused plan was captured for nq="
-                                         f"{reuse.nq}, got {nq} queries")
-                    perm = reuse.perm
-                    queries_s = queries[perm]
-                    plan, bundles, groups = (reuse.plan, reuse.bundles,
-                                             reuse.groups)
-                    sels_dev = reuse.sels_dev
-                    self._last["plan_reused"] = True
-                else:
-                    perm, _inv = ns._schedule(queries)
-                    queries_s = queries[perm]
-                    plan, bundles, groups = self._plan(queries_s)
-                    sels_dev = self._prepare_launch(groups)
-            ns.report.t_opt = sp_plan.duration
-            ns.report.num_partitions = plan.num_partitions
-            ns.report.bundles = bundles
-            self._last["bundles"] = len(bundles)
-            self._last["launches"] = len(groups)
+        # the top-level query span stays open until the pending result's
+        # wait() — plan/launch/sync all nest under it, preserving the
+        # section-9 span taxonomy across the dispatch/sync split
+        sp_query = obs.span("query", nq=nq)
+        sp_query.__enter__()
+        try:
+            return self._dispatch_pending(queries, nq, k, reuse, last,
+                                          sp_query)
+        except BaseException:
+            sp_query.__exit__(None, None, None)
+            raise
 
-            t0 = time.perf_counter()
-            with obs.span("launch", groups=len(groups)):
-                launcher = self._get_launcher(groups, nq)
-                # selections are edge-padded to their buckets so the
-                # launcher only ever sees bucketed shapes (zero retraces on
-                # count drift); the freshly-initialized output buffers are
-                # donated into the program
-                t_disp = time.perf_counter()
-                out_idx, out_d2, out_cnt = launcher(
-                    ns.grid, ns.points, queries_s, perm, sels_dev,
-                    jnp.full((nq, k), -1, jnp.int32),
-                    jnp.full((nq, k), jnp.inf, jnp.float32),
-                    jnp.zeros((nq,), jnp.int32))
-                if self._last["compilations"]:
-                    # the jit compile happened inside that first dispatch
-                    obs.record_span("compile",
-                                    time.perf_counter() - t_disp)
-            self._last["dispatches"] = 1
+    def _dispatch_pending(self, queries, nq, k, reuse, last, sp_query):
+        ns = self.ns
+        with obs.span("plan", reused=reuse is not None) as sp_plan:
+            if reuse is not None:
+                if reuse.nq != nq:
+                    raise ValueError(f"reused plan was captured for nq="
+                                     f"{reuse.nq}, got {nq} queries")
+                perm = reuse.perm
+                queries_s = queries[perm]
+                plan, bundles, groups = (reuse.plan, reuse.bundles,
+                                         reuse.groups)
+                sels_dev = reuse.sels_dev
+                last["plan_reused"] = True
+            else:
+                perm, _inv = ns._schedule(queries)
+                queries_s = queries[perm]
+                plan, bundles, groups = self._plan(queries_s)
+                sels_dev = self._prepare_launch(groups)
+        ns.report.t_opt = sp_plan.duration
+        ns.report.num_partitions = plan.num_partitions
+        ns.report.bundles = bundles
+        last["bundles"] = len(bundles)
+        last["launches"] = len(groups)
 
-            # one-sync contract: the single blocking materialization
-            with obs.span("sync"):
-                jax.block_until_ready((out_idx, out_d2, out_cnt))
-            self._last["host_syncs"] += 1
-            ns.report.t_search = time.perf_counter() - t0
-        ns.report.launches = self._last["launches"]
-        ns.report.host_syncs = self._last["host_syncs"]
-        ns.report.plan_fetches = self._last["plan_fetches"]
+        t0 = time.perf_counter()
+        with obs.span("launch", groups=len(groups)):
+            launcher = self._get_launcher(groups, nq)
+            # selections are edge-padded to their buckets so the
+            # launcher only ever sees bucketed shapes (zero retraces on
+            # count drift); the freshly-initialized output buffers are
+            # donated into the program
+            t_disp = time.perf_counter()
+            out_idx, out_d2, out_cnt = launcher(
+                ns.grid, ns.points, queries_s, perm, sels_dev,
+                jnp.full((nq, k), -1, jnp.int32),
+                jnp.full((nq, k), jnp.inf, jnp.float32),
+                jnp.zeros((nq,), jnp.int32))
+            if last["compilations"]:
+                # the jit compile happened inside that first dispatch
+                obs.record_span("compile", time.perf_counter() - t_disp)
+        last["dispatches"] = 1
+        return PendingResult(self, (out_idx, out_d2, out_cnt), last,
+                             sp_query, t0)
+
+    def _finalize(self, arrays, last, sp_query, t_launch) -> SearchResult:
+        """The pending result's one blocking sync + metric/report flush."""
+        ns = self.ns
+        out_idx, out_d2, out_cnt = arrays
+        with obs.span("sync"):
+            jax.block_until_ready(arrays)
+        sp_query.__exit__(None, None, None)
+        last["host_syncs"] += 1
+        ns.report.t_search = time.perf_counter() - t_launch
+        ns.report.launches = last["launches"]
+        ns.report.host_syncs = last["host_syncs"]
+        ns.report.plan_fetches = last["plan_fetches"]
+        self._last = last
 
         m = self._metrics
         m.count("queries")
         for key in ("launches", "dispatches", "bundles", "host_syncs",
                     "plan_fetches", "compilations"):
-            m.count(key, self._last[key])
-        m.count("plan_cache_hits", int(self._last["plan_cache_hit"]))
+            m.count(key, last[key])
+        m.count("plan_cache_hits", int(last["plan_cache_hit"]))
         m.count("plan_cache_misses",
-                int(not (self._last["plan_cache_hit"]
-                         or self._last["plan_reused"])))
-        m.count("plan_reuses", int(self._last["plan_reused"]))
-        m.count("launcher_cache_hits", int(self._last["launcher_cache_hit"]))
-        m.count("launcher_cache_misses", self._last["compilations"])
+                int(not (last["plan_cache_hit"] or last["plan_reused"])))
+        m.count("plan_reuses", int(last["plan_reused"]))
+        m.count("launcher_cache_hits", int(last["launcher_cache_hit"]))
+        m.count("launcher_cache_misses", last["compilations"])
         m.observe("query_s", sp_query.duration)
         m.observe("plan_s", ns.report.t_opt)
         m.gauge("plan_cache_entries", len(self._plan_cache))

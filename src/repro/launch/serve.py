@@ -1,60 +1,141 @@
-"""Serving driver: batched greedy generation with a KV cache.
+"""Neighbor-search serving driver: a synthetic multi-tenant request trace
+against ``repro.serve.NeighborService`` (DESIGN.md section 10).
 
-  PYTHONPATH=src python -m repro.launch.serve --arch lm-100m --requests 4 \
-      --prompt-len 16 --max-new 32
+Generates a seeded trace — N scenes, Poisson arrivals, per-request scene
+ids drawn from a skewed tenant mix, mixed radii/K signatures, variable
+query counts — drives it through the admission queue/micro-batcher, and
+reports QPS, batch occupancy, and end-to-end p50/p95/p99 latency from the
+unified telemetry registry.
+
+  PYTHONPATH=src python -m repro.launch.serve --scenes 3 --requests 200
+  PYTHONPATH=src python -m repro.launch.serve --smoke
+  PYTHONPATH=src python -m repro.launch.serve --lm --smoke   # LM demo
+
+The trace is deterministic per ``--seed`` (arrival process included), so
+two runs drain identical batch sequences — the property the serve tests
+pin down.
 """
 from __future__ import annotations
 
 import argparse
+import sys
+import time
 
-import jax
-import jax.numpy as jnp
+
+def build_trace(args):
+    """The seeded synthetic trace: (arrival_dt_s, scene_id, params,
+    queries) per request, plus the per-scene point clouds."""
+    import numpy as np
+
+    from repro.core import SearchParams
+
+    rng = np.random.default_rng(args.seed)
+    scenes = {
+        f"scene{i}": rng.random((args.points, 3)).astype(np.float32)
+        for i in range(args.scenes)
+    }
+    # mixed search signatures: the micro-batcher buckets by these
+    signatures = [
+        SearchParams(radius=0.09, k=8, knn_window="exact"),
+        SearchParams(radius=0.13, k=4, knn_window="exact"),
+        SearchParams(radius=0.11, k=16, knn_window="exact"),
+    ][: max(1, args.signatures)]
+    # skewed tenant popularity (hot first scene), normalized
+    weights = np.array([1.0 / (i + 1) for i in range(args.scenes)])
+    weights /= weights.sum()
+    scene_ids = list(scenes)
+    trace = []
+    for _ in range(args.requests):
+        dt = float(rng.exponential(1.0 / args.rate))
+        sid = scene_ids[int(rng.choice(args.scenes, p=weights))]
+        params = signatures[int(rng.integers(len(signatures)))]
+        nq = int(rng.integers(args.qmin, args.qmax + 1))
+        q = rng.random((nq, 3)).astype(np.float32)
+        trace.append((dt, sid, params, q))
+    return scenes, signatures, trace
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="lm-100m")
+    ap.add_argument("--lm", action="store_true",
+                    help="run the LM generation demo (repro.launch."
+                         "serve_lm) instead of the neighbor service")
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--requests", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--scenes", type=int, default=3)
+    ap.add_argument("--signatures", type=int, default=2,
+                    help="distinct (radius, K) request signatures in the mix")
+    ap.add_argument("--points", type=int, default=4000)
+    ap.add_argument("--requests", type=int, default=200)
+    ap.add_argument("--rate", type=float, default=2000.0,
+                    help="Poisson arrival rate (requests/s of trace time)")
+    ap.add_argument("--qmin", type=int, default=8)
+    ap.add_argument("--qmax", type=int, default=64)
+    ap.add_argument("--max-batch", type=int, default=None)
+    ap.add_argument("--max-wait-ms", type=float, default=10.0)
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    args, rest = ap.parse_known_args(argv)
+
+    if args.lm:
+        from . import serve_lm
+        return serve_lm.main(rest + (["--smoke"] if args.smoke else []))
+    if rest:
+        ap.error(f"unrecognized arguments: {' '.join(rest)}")
+    if args.smoke:
+        args.scenes, args.points = min(args.scenes, 2), 1200
+        args.requests, args.qmax = 64, 32
 
     from repro import obs
-    from repro.configs import smoke_config
-    from repro.models.config import get_config
-    from repro.models.model import init_params
-    from repro.train.serve_step import greedy_generate
+    from repro.serve import NeighborService, Rejected, ServeOpts
 
-    cfg = get_config(args.arch)
-    if args.smoke:
-        cfg = smoke_config(cfg)
-    key = jax.random.PRNGKey(args.seed)
-    params = init_params(cfg, key)
-    prompts = jax.random.randint(
-        key, (args.requests, args.prompt_len), 0, cfg.vocab, jnp.int32)
-    cache_len = args.prompt_len + args.max_new + 1
-    n_tok = args.requests * args.max_new
-    metrics = obs.metric_set("serve")
+    opts = ServeOpts(
+        max_batch=args.max_batch,
+        max_wait_s=(args.max_wait_ms / 1e3
+                    if args.max_wait_ms is not None else None))
+    svc = NeighborService(opts)
+    scenes, signatures, trace = build_trace(args)
+    # register + warm every (scene, signature) variant at the common
+    # launch bucket, so steady-state latency (not jit compiles) is what
+    # the trace measures — a real serving process warms at admission too
+    t_warm0 = time.perf_counter()
+    for sid, pts in scenes.items():
+        svc.register_scene(sid, pts)
+        for params in signatures:
+            svc.registry.get(sid).variant(params).warm(args.qmax)
+    print(f"serve: warmed {len(scenes)}x{len(signatures)} scene variants "
+          f"in {time.perf_counter() - t_warm0:.1f}s")
 
-    # warmup pass: pays tracing + XLA compilation (and is reported as
-    # such); the second identical-shape call hits the jit cache, so its
-    # timing is the steady-state serving throughput
-    with obs.span("warmup", arch=cfg.name) as sp_warm:
-        out = jax.block_until_ready(
-            greedy_generate(params, cfg, prompts, args.max_new, cache_len))
-    with obs.span("generate", arch=cfg.name) as sp_gen:
-        out = jax.block_until_ready(
-            greedy_generate(params, cfg, prompts, args.max_new, cache_len))
-    metrics.observe("warmup_s", sp_warm.duration)
-    metrics.observe("generate_s", sp_gen.duration)
-    metrics.count("tokens", 2 * n_tok)
-    print(f"arch={cfg.name} generated {out.shape} tokens: "
-          f"{n_tok / sp_gen.duration:.1f} tok/s steady-state, "
-          f"{n_tok / sp_warm.duration:.1f} tok/s incl. compile "
-          f"(warmup {sp_warm.duration:.2f}s)")
-    print(out[:, :16])
+    # drive the trace on a simulated arrival clock: submit each request at
+    # its arrival time, pumping whenever the bucket deadline has passed;
+    # wall-clock (real) time is what QPS/latency are measured in
+    futures, rejected = [], 0
+    t_wall0 = time.perf_counter()
+    now = 0.0
+    for dt, sid, params, q in trace:
+        now += dt
+        try:
+            futures.append(svc.submit(sid, q, params, now=now))
+        except Rejected:
+            rejected += 1
+            svc.pump(now=now, force=True)
+            futures.append(svc.submit(sid, q, params, now=now))
+        svc.pump(now=now)
+    reports = svc.drain()
+    wall = time.perf_counter() - t_wall0
+
+    for f in futures:
+        f.result(timeout=60.0)
+    st = svc.stats()
+    n = len(futures)
+    occ = sum(r.nq for r in reports) / max(
+        sum(r.pad_n for r in reports), 1)
+    snap = svc._metrics.snapshot().get("request_s", {})
+    pct = {k: snap.get(k, 0.0) for k in ("p50", "p95", "p99")}
+    print(f"serve: {n} requests over {len(scenes)} scenes -> "
+          f"{st['batches']} batches ({st['host_syncs']} host syncs), "
+          f"{n / wall:.1f} req/s, occupancy {occ:.2f}, "
+          f"{rejected} rejected")
+    print(f"serve: e2e latency p50={pct['p50'] * 1e3:.2f}ms "
+          f"p95={pct['p95'] * 1e3:.2f}ms p99={pct['p99'] * 1e3:.2f}ms")
     if obs.trace_enabled():
         print(obs.summary())
 

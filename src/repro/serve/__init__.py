@@ -1,0 +1,44 @@
+"""repro.serve — multi-tenant streaming neighbor-query service
+(DESIGN.md section 10).
+
+Layers a serving contract over the functional core and the device-resident
+executor: a scene registry (LRU residency, per-signature compiled serve
+programs), an admission queue with signature-bucket micro-batching (one
+concatenated launch — and one host sync — per drained batch), futures with
+bounded-queue backpressure, per-scene fairness, and full ``repro.obs``
+telemetry (queue depth, batch occupancy, p50/p95/p99 request latency).
+
+Quickstart::
+
+    from repro.serve import NeighborService
+    from repro.core import SearchParams
+
+    svc = NeighborService()
+    svc.register_scene("city", points)
+    futs = [svc.submit("city", q, SearchParams(radius=0.1, k=8))
+            for q in request_queries]
+    svc.drain()                      # or svc.start() for a background pump
+    results = [f.result() for f in futs]
+"""
+from .batcher import (BatchReport, MicroBatcher, Request,  # noqa: F401
+                      StagedBatch, split_result, stage_batch)
+from .registry import (SceneRecord, SceneRegistry,  # noqa: F401
+                       SceneVariant)
+from .service import (NeighborService, Rejected,  # noqa: F401
+                      ServeFuture, ServeOpts)
+
+__all__ = [
+    "BatchReport",
+    "MicroBatcher",
+    "NeighborService",
+    "Rejected",
+    "Request",
+    "SceneRecord",
+    "SceneRegistry",
+    "SceneVariant",
+    "ServeFuture",
+    "ServeOpts",
+    "StagedBatch",
+    "split_result",
+    "stage_batch",
+]

@@ -1,0 +1,379 @@
+"""Multi-tenant streaming neighbor-query service (DESIGN.md section 10).
+
+``NeighborService`` layers the serving contract over the functional core:
+
+* ``submit(scene_id, queries, params)`` admits a request and returns a
+  :class:`ServeFuture` resolved at drain time. Admission is bounded: past
+  the ``max_pending`` high-water mark the queue **rejects with
+  retry-after** (:class:`Rejected`) instead of growing without bound.
+* ``pump()`` drains every *due* signature bucket (see ``batcher``) as one
+  concatenated launch through the scene's variant-private compiled
+  ``api.query`` program — ONE blocking host sync per drained batch — with
+  the next batch staged and dispatched while the previous one executes
+  (``pipeline`` in-flight batches; the dispatch-then-stage overlap).
+* ``drain()`` pumps with the deadline forced until the queue is empty.
+* ``start()/stop()`` run the pump on a background thread for real
+  streaming callers; the synchronous surface stays fully deterministic for
+  tests and the trace driver.
+
+Every stage feeds the unified telemetry layer (``repro.obs``, component
+``serve``): queue-depth gauges, batch-occupancy histograms, end-to-end
+request latency percentiles, and the host-sync counter the one-sync
+contract is asserted against. ``obs.summary()`` over a serving process
+reads as the service dashboard.
+"""
+from __future__ import annotations
+
+import collections
+import os
+import threading
+import time
+
+import jax
+
+from .. import obs
+from ..core.types import SearchOpts, SearchParams, SearchResult
+from .batcher import BatchReport, MicroBatcher, Request, split_result, \
+    stage_batch
+from .registry import SceneRegistry
+
+
+def _env_int(name: str, default: int) -> int:
+    return int(os.environ.get(name, default))
+
+
+def _env_float(name: str, default: float) -> float:
+    return float(os.environ.get(name, default))
+
+
+class ServeOpts:
+    """Service knobs (env defaults, DESIGN.md section 4 ``REPRO_SERVE_*``).
+
+    ``max_pending``   admission high-water mark in pending *query rows*;
+    ``max_batch``     max concatenated query rows per drained launch;
+    ``max_wait_s``    bucket deadline — a request waits at most this long
+                      before its bucket is due even if nearly empty
+                      (``REPRO_SERVE_MAX_WAIT_MS`` is in milliseconds);
+    ``pipeline``      in-flight launches the drain loop keeps before
+                      syncing the oldest (0 = sync immediately after each
+                      dispatch, i.e. no overlap);
+    ``scenes``        registry capacity (resident scenes, LRU-evicted).
+    """
+
+    __slots__ = ("max_pending", "max_batch", "max_wait_s", "pipeline",
+                 "scenes")
+
+    def __init__(self, max_pending: int | None = None,
+                 max_batch: int | None = None,
+                 max_wait_s: float | None = None,
+                 pipeline: int | None = None,
+                 scenes: int | None = None):
+        self.max_pending = (_env_int("REPRO_SERVE_MAX_PENDING", 65536)
+                            if max_pending is None else int(max_pending))
+        self.max_batch = (_env_int("REPRO_SERVE_MAX_BATCH", 4096)
+                          if max_batch is None else int(max_batch))
+        self.max_wait_s = (
+            _env_float("REPRO_SERVE_MAX_WAIT_MS", 2.0) / 1e3
+            if max_wait_s is None else float(max_wait_s))
+        self.pipeline = (_env_int("REPRO_SERVE_PIPELINE", 1)
+                         if pipeline is None else int(pipeline))
+        self.scenes = (_env_int("REPRO_SERVE_SCENES", 8)
+                       if scenes is None else int(scenes))
+        if self.max_batch < 1 or self.max_pending < 1:
+            raise ValueError("max_batch and max_pending must be >= 1")
+        if self.pipeline < 0:
+            raise ValueError("pipeline must be >= 0")
+
+
+class Rejected(RuntimeError):
+    """Admission refused past the high-water mark; retry after
+    ``retry_after_s`` (an estimate from recent drain throughput)."""
+
+    def __init__(self, pending: int, limit: int, retry_after_s: float):
+        super().__init__(
+            f"admission queue full ({pending} pending query rows >= "
+            f"high-water {limit}); retry after ~{retry_after_s * 1e3:.1f}ms")
+        self.retry_after_s = retry_after_s
+
+
+class ServeFuture:
+    """Result handle resolved when the request's batch drains."""
+
+    __slots__ = ("_event", "_result", "_exc", "request_id")
+
+    def __init__(self, request_id: int):
+        self.request_id = request_id
+        self._event = threading.Event()
+        self._result: SearchResult | None = None
+        self._exc: BaseException | None = None
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def set_result(self, result: SearchResult) -> None:
+        self._result = result
+        self._event.set()
+
+    def set_exception(self, exc: BaseException) -> None:
+        self._exc = exc
+        self._event.set()
+
+    def exception(self) -> BaseException | None:
+        return self._exc if self._event.is_set() else None
+
+    def result(self, timeout: float | None = None) -> SearchResult:
+        if not self._event.wait(timeout):
+            raise TimeoutError(
+                f"request {self.request_id} not drained within {timeout}s")
+        if self._exc is not None:
+            raise self._exc
+        return self._result
+
+
+class _InFlight:
+    """One dispatched, not-yet-synced batch riding the drain pipeline."""
+
+    __slots__ = ("staged", "result", "t_dispatch", "compiled")
+
+    def __init__(self, staged, result, t_dispatch, compiled):
+        self.staged = staged
+        self.result = result
+        self.t_dispatch = t_dispatch
+        self.compiled = compiled
+
+
+class NeighborService:
+    """The multi-tenant serving frontend over a :class:`SceneRegistry`.
+
+    >>> svc = NeighborService()
+    >>> svc.register_scene("city", points)
+    >>> fut = svc.submit("city", queries, SearchParams(radius=0.1, k=8))
+    >>> svc.drain()
+    >>> res = fut.result()
+    """
+
+    def __init__(self, opts: ServeOpts | None = None,
+                 registry: SceneRegistry | None = None):
+        self.opts = opts if opts is not None else ServeOpts()
+        # NOT `registry or ...`: an empty registry is falsy (__len__ == 0)
+        # but still the caller's shared instance
+        self.registry = (registry if registry is not None
+                         else SceneRegistry(capacity=self.opts.scenes))
+        self._batcher = MicroBatcher()
+        self._lock = threading.RLock()
+        self._seq = 0
+        self._metrics = obs.metric_set("serve")
+        self._batch_s = collections.deque(maxlen=32)   # recent drain times
+        self._thread: threading.Thread | None = None
+        self._stop_event = threading.Event()
+
+    # -- scene management ---------------------------------------------------
+
+    def register_scene(self, scene_id, points, *, spec=None,
+                       warm: tuple[SearchParams, int] | None = None):
+        """Admit a static scene. ``warm=(params, nq)`` optionally builds
+        the signature variant and compiles its ``nq``-bucket serve program
+        up front, so the first drained batch pays no compile."""
+        rec = self.registry.add_scene(scene_id, points, spec=spec)
+        if warm is not None:
+            params, nq = warm
+            rec.variant(params).warm(nq)
+        return rec
+
+    def register_session(self, scene_id, session):
+        """Admit a live ``SimulationSession`` as a dynamic scene (queries
+        drain against its current frame)."""
+        return self.registry.add_session(scene_id, session)
+
+    # -- admission ----------------------------------------------------------
+
+    def _retry_after(self) -> float:
+        mean_batch = (sum(self._batch_s) / len(self._batch_s)
+                      if self._batch_s else self.opts.max_wait_s)
+        backlog = self._batcher.pending_queries / max(self.opts.max_batch, 1)
+        return max(self.opts.max_wait_s, mean_batch * max(backlog, 1.0))
+
+    def submit(self, scene_id, queries, params: SearchParams,
+               opts: SearchOpts = SearchOpts(), *,
+               now: float | None = None) -> ServeFuture:
+        """Admit one request; returns its future (resolved at drain time).
+
+        Raises ``KeyError`` for a non-resident scene and :class:`Rejected`
+        past the ``max_pending`` high-water mark. ``now`` overrides the
+        admission timestamp (simulated-clock trace drivers).
+        """
+        import numpy as np
+
+        q = np.asarray(queries, np.float32)
+        if q.ndim != 2 or q.shape[1] != 3:
+            raise ValueError(f"queries must be [nq, 3], got {q.shape}")
+        with self._lock:
+            if scene_id not in self.registry:
+                raise KeyError(f"scene {scene_id!r} is not resident — "
+                               "register_scene first")
+            pending = self._batcher.pending_queries
+            if pending + q.shape[0] > self.opts.max_pending:
+                self._metrics.count("rejected")
+                raise Rejected(pending, self.opts.max_pending,
+                               self._retry_after())
+            self._seq += 1
+            fut = ServeFuture(self._seq)
+            t_real = time.monotonic()
+            req = Request(seq=self._seq, scene_id=scene_id, params=params,
+                          opts=opts, queries=q, future=fut,
+                          t_submit=t_real if now is None else float(now),
+                          t_real=t_real)
+            self._batcher.add(req)
+            self._metrics.count("requests")
+            self._metrics.count("query_rows", q.shape[0])
+            self._gauge_depth()
+        return fut
+
+    def _gauge_depth(self) -> None:
+        nreq, nq = self._batcher.queue_depth()
+        self._metrics.gauge("queue_depth", nreq)
+        self._metrics.gauge("queue_queries", nq)
+
+    # -- drain --------------------------------------------------------------
+
+    def _dispatch(self, key, requests) -> _InFlight:
+        """Stage (host concat/pad/upload) and asynchronously dispatch one
+        batch through the scene variant's compiled serve program."""
+        scene_id, params, sopts = key
+        variant = self.registry.resolve(scene_id, params, sopts)
+        staged = stage_batch(key, requests,
+                             variant.pad_to_bucket(
+                                 sum(r.nq for r in requests)))
+        cache0 = variant.compiled_programs()
+        t0 = time.perf_counter()
+        result = variant.fn(variant.index, staged.queries)
+        compiled = variant.compiled_programs() > cache0
+        if compiled:
+            variant.warmed.add(staged.pad_n)
+            obs.record_span("compile", time.perf_counter() - t0)
+        return _InFlight(staged, result, t0, compiled)
+
+    def _finish(self, flight: _InFlight, now_fn=time.monotonic) -> None:
+        """The drained batch's ONE blocking host sync, then future
+        resolution (device-sliced views — no further transfer)."""
+        res = flight.result
+        with obs.span("sync"):
+            jax.block_until_ready((res.indices, res.distances2, res.counts))
+        self._metrics.count("host_syncs")
+        self._metrics.count("batches")
+        dt = time.perf_counter() - flight.t_dispatch
+        self._batch_s.append(dt)
+        self._metrics.observe("batch_s", dt)
+        staged = flight.staged
+        self._metrics.observe("batch_queries", staged.nq)
+        self._metrics.observe("batch_requests", len(staged.requests))
+        self._metrics.observe("batch_occupancy", staged.nq / staged.pad_n)
+        now = now_fn()
+        for req, res_i in zip(staged.requests, split_result(staged, res)):
+            req.future.set_result(res_i)
+            self._metrics.observe("request_s", max(0.0, now - req.t_real))
+        self._metrics.count("resolved", len(staged.requests))
+
+    def pump(self, now: float | None = None, *,
+             force: bool = False) -> list[BatchReport]:
+        """Drain every due bucket once; returns the batch reports in drain
+        order (the deterministic record tests and drivers consume).
+
+        The loop is pipelined: up to ``opts.pipeline`` dispatched batches
+        stay in flight while the next one is staged on the host, and each
+        batch's single blocking sync happens only when it leaves the
+        pipeline (or at the end of the pump).
+        """
+        with self._lock:
+            now = time.monotonic() if now is None else float(now)
+            reports: list[BatchReport] = []
+            inflight: collections.deque = collections.deque()
+            with obs.span("pump", forced=force):
+                while True:
+                    taken = self._batcher.take(
+                        now, max_wait=self.opts.max_wait_s,
+                        max_batch=self.opts.max_batch, force=force)
+                    if taken is None:
+                        break
+                    key, requests = taken
+                    with obs.span("launch", scene=str(key[0]),
+                                  requests=len(requests)):
+                        try:
+                            flight = self._dispatch(key, requests)
+                        except KeyError as exc:
+                            # scene evicted between admission and drain:
+                            # fail the batch's futures, keep serving
+                            for r in requests:
+                                r.future.set_exception(
+                                    KeyError(f"scene {key[0]!r} evicted "
+                                             f"before drain: {exc}"))
+                            self._metrics.count("failed_batches")
+                            continue
+                    scene_id, params, _sopts = key
+                    reports.append(BatchReport(
+                        scene_id=scene_id, params=params,
+                        seqs=tuple(r.seq for r in requests),
+                        nq=flight.staged.nq, pad_n=flight.staged.pad_n))
+                    inflight.append(flight)
+                    # dispatch-then-stage: sync the OLDEST in-flight batch
+                    # only once the pipeline is over depth, so the next
+                    # iteration's staging overlapped this batch's execution
+                    while len(inflight) > self.opts.pipeline:
+                        self._finish(inflight.popleft())
+                while inflight:
+                    self._finish(inflight.popleft())
+            self._gauge_depth()
+            return reports
+
+    def drain(self) -> list[BatchReport]:
+        """Force-pump until the admission queue is empty."""
+        reports: list[BatchReport] = []
+        while True:
+            got = self.pump(force=True)
+            if not got:
+                break
+            reports.extend(got)
+        return reports
+
+    # -- background pump ----------------------------------------------------
+
+    def start(self, poll_s: float | None = None) -> None:
+        """Run the pump on a daemon thread (real streaming callers). The
+        thread wakes every ``poll_s`` (default: half the bucket deadline)
+        and drains whatever is due."""
+        if self._thread is not None:
+            return
+        period = poll_s if poll_s is not None else \
+            max(self.opts.max_wait_s / 2, 1e-4)
+        self._stop_event.clear()
+
+        def loop():
+            while not self._stop_event.wait(period):
+                self.pump()
+
+        self._thread = threading.Thread(target=loop, name="repro-serve-pump",
+                                        daemon=True)
+        self._thread.start()
+
+    def stop(self, final_drain: bool = True) -> None:
+        if self._thread is None:
+            return
+        self._stop_event.set()
+        self._thread.join()
+        self._thread = None
+        if final_drain:
+            self.drain()
+
+    # -- surface ------------------------------------------------------------
+
+    def queue_depth(self) -> int:
+        return self._batcher.pending_requests
+
+    def stats(self) -> dict:
+        nreq, nq = self._batcher.queue_depth()
+        return {
+            **self._metrics.counters(),
+            "queue_depth": nreq,
+            "queue_queries": nq,
+            "registry": self.registry.stats(),
+        }

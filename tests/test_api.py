@@ -350,6 +350,7 @@ API_SNAPSHOT = (
     "launch_signatures",
     "plan_query",
     "query",
+    "query_concat",
     "searcher_cache_clear",
     "searcher_cache_stats",
     "update_index",

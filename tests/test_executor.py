@@ -96,6 +96,32 @@ def test_one_sync_contract(rng):
     assert last2["plan_fetches"] == 0
 
 
+def test_execute_async_overlap_matches_execute(rng):
+    """Dispatch-then-stage carryover: two batches dispatched before either
+    syncs return results identical to the blocking path, each paying its
+    own single host sync at wait()."""
+    pts = rng.random((1800, 3)).astype(np.float32)
+    qa = rng.random((384, 3)).astype(np.float32)
+    qb = rng.random((384, 3)).astype(np.float32)
+    ns = NeighborSearch(pts, SearchParams(radius=0.09, k=8), SearchOpts())
+    ref_a, ref_b = ns.query(qa), ns.query(qb)
+
+    pa = ns.executor.execute_async(qa)      # both in flight before any sync
+    pb = ns.executor.execute_async(qb)
+    got_b = pb.wait()                       # out-of-order sync is fine
+    got_a = pa.wait()
+    for got, ref in ((got_a, ref_a), (got_b, ref_b)):
+        np.testing.assert_array_equal(np.asarray(got.indices),
+                                      np.asarray(ref.indices))
+        np.testing.assert_array_equal(np.asarray(got.counts),
+                                      np.asarray(ref.counts))
+    last = ns.executor.stats()["last"]
+    assert last["host_syncs"] == 1          # per-batch, not accumulated
+    assert last["plan_cache_hit"] and last["launcher_cache_hit"]
+    assert pa.wait() is got_a               # idempotent
+    assert pa.done() and pb.done()
+
+
 def test_signature_batching_folds_bundles(rng):
     """Bundles sharing (w_search, skip_test) must fold into one launch:
     launches <= bundles always, and == unique signatures."""

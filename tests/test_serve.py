@@ -1,0 +1,318 @@
+"""Multi-tenant serving layer tests (repro.serve, DESIGN.md section 10).
+
+The contracts:
+
+1. **bitwise parity + one sync per drained batch** — a mixed multi-scene,
+   mixed-signature trace served through the micro-batcher returns results
+   bitwise-identical to per-request ``api.query``, while the obs sync
+   counter shows exactly one host sync per drained batch (and far fewer
+   batches than requests);
+2. **registry residency** — LRU eviction releases compiled state and fires
+   callbacks, readmission re-warms the caches and keeps correctness, and a
+   scene evicted between admission and drain fails its futures instead of
+   wedging the service;
+3. **backpressure** — past the high-water mark ``submit`` rejects with a
+   retry-after estimate, and the queue drains back to empty and accepts
+   again;
+4. **scheduling** — drain order is deterministic under a seeded trace
+   (pipelining depth included), buckets honor the max-wait deadline and
+   max-batch size, and per-scene round-robin keeps a cold tenant from
+   starving behind a hot one.
+"""
+import numpy as np
+import pytest
+
+import repro.api as api
+from repro import obs
+from repro.core import (SearchOpts, SearchParams, SimulationSession)
+from repro.serve import (NeighborService, Rejected, SceneRegistry,
+                         ServeOpts)
+
+P_A = SearchParams(radius=0.11, k=8, knn_window="exact")
+P_B = SearchParams(radius=0.15, k=4, knn_window="exact")
+
+
+@pytest.fixture(autouse=True)
+def clean_obs():
+    obs.reset()
+    yield
+    obs.configure()
+    obs.reset()
+
+
+def _scenes(rng, sizes=(1100, 800)):
+    return {f"s{i}": rng.random((n, 3)).astype(np.float32)
+            for i, n in enumerate(sizes)}
+
+
+def _trace(rng, scene_ids, n_requests, params=(P_A, P_B),
+           qmin=5, qmax=60):
+    out = []
+    for i in range(n_requests):
+        sid = scene_ids[int(rng.integers(len(scene_ids)))]
+        p = params[int(rng.integers(len(params)))]
+        q = rng.random((int(rng.integers(qmin, qmax + 1)), 3)) \
+            .astype(np.float32)
+        out.append((sid, p, q))
+    return out
+
+
+def _assert_bitwise(got, ref):
+    np.testing.assert_array_equal(np.asarray(got.indices),
+                                  np.asarray(ref.indices))
+    np.testing.assert_array_equal(np.asarray(got.counts),
+                                  np.asarray(ref.counts))
+    da = np.where(np.isinf(np.asarray(got.distances2)), -1.0,
+                  np.asarray(got.distances2))
+    db = np.where(np.isinf(np.asarray(ref.distances2)), -1.0,
+                  np.asarray(ref.distances2))
+    np.testing.assert_array_equal(da, db)
+
+
+# ------------------------------------------------ parity + one-sync contract
+
+
+def test_serve_bitwise_parity_and_one_sync_per_batch(rng):
+    """Acceptance: every request in a mixed multi-scene trace comes back
+    bitwise-identical to per-request ``api.query``, with exactly one host
+    sync per drained batch (obs counter) and real micro-batching (batches
+    << requests)."""
+    scenes = _scenes(rng)
+    svc = NeighborService(ServeOpts(max_batch=512, max_pending=100_000))
+    for sid, pts in scenes.items():
+        svc.register_scene(sid, pts)
+
+    trace = _trace(rng, list(scenes), 28)
+    futures = [(sid, p, q, svc.submit(sid, q, p)) for sid, p, q in trace]
+    reports = svc.drain()
+
+    st = svc.stats()
+    assert st["host_syncs"] == st["batches"] == len(reports)
+    assert len(reports) < len(futures)           # coalescing happened
+    assert st["resolved"] == len(futures)
+    assert st["queue_depth"] == 0
+
+    refs = {}
+    for sid, p, q, fut in futures:
+        key = (sid, p)
+        if key not in refs:
+            refs[key] = api.build_index(scenes[sid], p)
+        _assert_bitwise(fut.result(timeout=30), api.query(refs[key], q))
+
+
+def test_query_concat_entry_point_matches_per_request(rng):
+    """The core batch-concat entry (``api.query_concat``) is the drain
+    contract in miniature: one launch, per-request bitwise results."""
+    pts = rng.random((900, 3)).astype(np.float32)
+    index = api.build_index(pts, P_A)
+    qs = [rng.random((n, 3)).astype(np.float32) for n in (7, 33, 128, 1)]
+    outs = api.query_concat(index, qs)
+    assert len(outs) == len(qs)
+    for q, got in zip(qs, outs):
+        _assert_bitwise(got, api.query(index, q))
+    assert api.query_concat(index, []) == []
+
+
+def test_session_backed_scene_serves_current_frame(rng):
+    """A live SimulationSession registers as a dynamic scene: drained
+    queries hit the session's current index leaves."""
+    pts = rng.random((600, 3)).astype(np.float32)
+    sess = SimulationSession(pts, P_A)
+    sess.step(pts)
+    pts2 = np.clip(pts + rng.normal(0, 0.004, pts.shape),
+                   0, 1).astype(np.float32)
+    sess.step(pts2)
+
+    svc = NeighborService()
+    svc.register_session("sim", sess)
+    q = rng.random((40, 3)).astype(np.float32)
+    fut = svc.submit("sim", q, P_A)
+    svc.drain()
+    _assert_bitwise(fut.result(timeout=30), api.query(sess.index, q))
+    # a mismatched signature against a session-backed scene fails loudly
+    with pytest.raises(ValueError):
+        svc.registry.resolve("sim", P_B)
+
+
+# ------------------------------------------------------- registry residency
+
+
+def test_registry_lru_eviction_and_readmission_rewarm(rng):
+    scenes = _scenes(rng, sizes=(700, 500))
+    evicted = []
+    svc = NeighborService(ServeOpts(scenes=1))
+    svc.registry.on_evict(lambda sid, rec: evicted.append(sid))
+
+    svc.register_scene("s0", scenes["s0"])
+    q = rng.random((24, 3)).astype(np.float32)
+    fut = svc.submit("s0", q, P_A)
+    svc.drain()
+    v0 = svc.registry.get("s0").variant(P_A)
+    assert v0.compiled_programs() >= 1           # serve program compiled
+    ref = api.query(api.build_index(scenes["s0"], P_A), q)
+    _assert_bitwise(fut.result(), ref)
+
+    svc.register_scene("s1", scenes["s1"])       # capacity 1 -> evicts s0
+    assert evicted == ["s0"]
+    assert "s0" not in svc.registry and "s1" in svc.registry
+    assert v0.fn is None                         # compiled state released
+    assert v0.searcher.executor.stats()["plan_cache_entries"] == 0
+    with pytest.raises(KeyError):
+        svc.submit("s0", q, P_A)
+
+    # readmission: fresh variant, re-warms, same bitwise results
+    svc.register_scene("s0", scenes["s0"])
+    v1 = svc.registry.get("s0").variant(P_A)
+    assert v1 is not v0 and v1.compiled_programs() == 0
+    fut2 = svc.submit("s0", q, P_A)
+    svc.drain()
+    assert v1.compiled_programs() >= 1
+    _assert_bitwise(fut2.result(), ref)
+
+
+def test_scene_evicted_between_admission_and_drain_fails_futures(rng):
+    scenes = _scenes(rng, sizes=(600, 500, 400))
+    svc = NeighborService(ServeOpts(scenes=2))
+    svc.register_scene("s0", scenes["s0"])
+    svc.register_scene("s1", scenes["s1"])
+    q = rng.random((16, 3)).astype(np.float32)
+    fut_dead = svc.submit("s0", q, P_A)
+    fut_live = svc.submit("s1", q, P_A)
+    svc.register_scene("s2", scenes["s2"])       # evicts LRU = s0
+    reports = svc.drain()
+    assert isinstance(fut_dead.exception(), KeyError)
+    assert fut_live.exception() is None
+    _assert_bitwise(fut_live.result(),
+                    api.query(api.build_index(scenes["s1"], P_A), q))
+    assert {r.scene_id for r in reports} == {"s1"}
+    assert svc.stats()["failed_batches"] == 1
+    assert svc.queue_depth() == 0
+
+
+def test_registry_warm_on_register(rng):
+    pts = rng.random((500, 3)).astype(np.float32)
+    svc = NeighborService()
+    svc.register_scene("s", pts, warm=(P_A, 64))
+    v = svc.registry.get("s").variant(P_A)
+    assert v.compiled_programs() == 1
+    # the warmed bucket serves without further compiles
+    fut = svc.submit("s", rng.random((20, 3)).astype(np.float32), P_A)
+    svc.drain()
+    assert fut.done() and v.compiled_programs() == 1
+
+
+# ------------------------------------------------------------- backpressure
+
+
+def test_backpressure_rejects_past_high_water_then_drains(rng):
+    pts = rng.random((600, 3)).astype(np.float32)
+    svc = NeighborService(ServeOpts(max_pending=100, max_batch=256))
+    svc.register_scene("s", pts)
+    q = rng.random((40, 3)).astype(np.float32)
+    accepted = [svc.submit("s", q, P_A), svc.submit("s", q, P_A)]
+    with pytest.raises(Rejected) as exc_info:
+        svc.submit("s", q, P_A)                  # 120 pending > 100
+    assert exc_info.value.retry_after_s > 0
+    assert svc.stats()["rejected"] == 1
+
+    svc.drain()                                  # drains to empty...
+    assert svc.queue_depth() == 0
+    fut = svc.submit("s", q, P_A)                # ...and admits again
+    svc.drain()
+    assert fut.done()
+    for f in accepted:
+        assert f.done()
+
+
+# --------------------------------------------------------------- scheduling
+
+
+def test_deterministic_drain_order_under_seeded_trace():
+    """Same seeded trace, fresh services (different pipeline depths
+    included) -> identical batch sequence (scene, signature, request seqs,
+    padded size)."""
+
+    def run(pipeline):
+        rng = np.random.default_rng(7)
+        scenes = _scenes(rng)
+        svc = NeighborService(ServeOpts(max_batch=256, pipeline=pipeline,
+                                        max_pending=100_000))
+        for sid, pts in scenes.items():
+            svc.register_scene(sid, pts)
+        for sid, p, q in _trace(rng, list(scenes), 30):
+            svc.submit(sid, q, p)
+        return [(r.scene_id, r.params, r.seqs, r.nq, r.pad_n)
+                for r in svc.drain()]
+
+    first = run(pipeline=1)
+    assert first == run(pipeline=1) == run(pipeline=0) == run(pipeline=3)
+    assert len(first) > 1
+
+
+def test_bucket_deadline_and_max_batch(rng):
+    pts = rng.random((500, 3)).astype(np.float32)
+    svc = NeighborService(ServeOpts(max_batch=64, max_wait_s=10.0))
+    svc.register_scene("s", pts)
+    q = rng.random((8, 3)).astype(np.float32)
+
+    svc.submit("s", q, P_A, now=0.0)
+    assert svc.pump(now=0.5) == []               # not full, not due
+    assert svc.queue_depth() == 1
+    reports = svc.pump(now=10.5)                 # past the deadline
+    assert len(reports) == 1 and svc.queue_depth() == 0
+
+    # a full bucket drains immediately, capped at max_batch rows
+    for i in range(10):
+        svc.submit("s", q, P_A, now=20.0)
+    reports = svc.pump(now=20.0)
+    assert len(reports) >= 1
+    assert all(r.nq <= 64 for r in reports)
+    assert sum(len(r.seqs) for r in reports) == 8    # 2 of 10 not yet due
+    assert svc.queue_depth() == 2
+    svc.drain()
+
+
+def test_per_scene_fairness_no_starvation(rng):
+    """A hot tenant needing several drains cannot starve a cold one: the
+    round-robin interleaves scenes, so the cold scene's single request
+    drains within the first two batches."""
+    scenes = _scenes(rng, sizes=(700, 500))
+    svc = NeighborService(ServeOpts(max_batch=128, max_pending=100_000))
+    for sid, pts in scenes.items():
+        svc.register_scene(sid, pts)
+    hot = rng.random((64, 3)).astype(np.float32)
+    for _ in range(6):
+        svc.submit("s0", hot, P_A)               # 6 batches' worth? 3 of 2
+    cold_fut = svc.submit("s1", rng.random((16, 3)).astype(np.float32),
+                          P_A)
+    reports = svc.drain()
+    cold_pos = next(i for i, r in enumerate(reports)
+                    if r.scene_id == "s1")
+    assert cold_pos <= 1
+    assert cold_fut.done()
+    assert sum(r.scene_id == "s0" for r in reports) >= 3
+
+
+def test_standalone_registry_capacity_validation():
+    with pytest.raises(ValueError):
+        SceneRegistry(capacity=0)
+    with pytest.raises(ValueError):
+        ServeOpts(max_batch=0)
+    with pytest.raises(ValueError):
+        ServeOpts(pipeline=-1)
+
+
+def test_background_pump_resolves_futures(rng):
+    """The daemon pump drains due buckets without explicit pump calls
+    (real streaming callers)."""
+    pts = rng.random((500, 3)).astype(np.float32)
+    svc = NeighborService(ServeOpts(max_wait_s=0.01))
+    svc.register_scene("s", pts, warm=(P_A, 256))
+    svc.start(poll_s=0.005)
+    try:
+        fut = svc.submit("s", rng.random((12, 3)).astype(np.float32), P_A)
+        res = fut.result(timeout=30.0)
+        assert np.asarray(res.indices).shape == (12, P_A.k)
+    finally:
+        svc.stop()
+    assert svc.queue_depth() == 0
