@@ -17,6 +17,11 @@ python -m pytest -x -q tests/test_api.py::test_public_api_snapshot
 # change results or break the one-sync/caching contracts unnoticed
 REPRO_TRACE=1 python -m pytest -x -q --ignore=tests/test_multidevice.py
 
+# validation-on smoke: the tier-1 suite once with input validation armed
+# (REPRO_VALIDATE=1, DESIGN.md section 11) — validation is host-side
+# pre-upload only, so jaxprs, results, and sync counts must be identical
+REPRO_VALIDATE=1 python -m pytest -x -q --ignore=tests/test_multidevice.py
+
 # the mesh paths (sharded sessions, distributed routing, shard_map
 # composition) under 8 forced host devices so they execute on CPU CI even
 # when the default device count is 1 (the tests also re-exec themselves in
@@ -47,6 +52,13 @@ python scripts/check_bench.py BENCH_batch.json BENCH_dynamic.json \
 # the serve telemetry path cannot change results unnoticed
 python -m repro.launch.serve --smoke
 REPRO_TRACE=1 python -m repro.launch.serve --smoke
+
+# seeded chaos smoke (DESIGN.md section 11): the same serve trace under
+# deterministic fault injection — 20% launch failures, 10% stragglers —
+# must account every request to one taxonomy outcome with ZERO hung
+# futures (the driver exits nonzero on any stranded future)
+REPRO_FAULTS=launch:0.2,straggler:0.1 \
+    python -m repro.launch.serve --trace short
 
 # smoke the dynamic-scene session path: the SPH example on the session
 # (and its legacy A/B flag), so the SimulationSession path cannot

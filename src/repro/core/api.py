@@ -55,14 +55,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..reliability.errors import QueryError
 from .grid import (build_cell_grid, choose_grid_spec, parked_mask,
                    update_cell_grid_traced)
 from .partition import (MegacellStatics, compute_megacells, launch_signatures,
                         megacell_statics, signature_levels)
 from .schedule import schedule_by_level
 from .search import window_tile_search
-from .types import (Array, CellGrid, GridSpec, SearchOpts, SearchParams,
-                    SearchResult, UpdateStats)
+from .types import (PARK_THRESHOLD, Array, CellGrid, GridSpec, SearchOpts,
+                    SearchParams, SearchResult, UpdateStats)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -329,6 +330,56 @@ def _execute_plan_scoped(index, queries, plan):
     return SearchResult(indices=out_idx, distances2=out_d2, counts=out_cnt)
 
 
+def _validate_enabled() -> bool:
+    """`REPRO_VALIDATE=1` validates host-side query inputs inside
+    ``query`` (DESIGN.md sections 4/11). Read per call, not at import."""
+    return os.environ.get("REPRO_VALIDATE", "0") not in ("", "0")
+
+
+def validate_queries(queries, *, lo=None, hi=None,
+                     max_rows: int = 8):
+    """Reject unservable query inputs with a structured
+    :class:`~repro.reliability.QueryError` — the serving layer's
+    graceful-degradation gate (DESIGN.md section 11).
+
+    Checks NaN, inf, and out-of-domain rows. The default domain check
+    only catches coordinates whose magnitude reaches the parked-row
+    sentinel threshold (``types.PARK_THRESHOLD`` — such rows would be
+    silently dropped from grids built with ``mask_parked``); explicit
+    ``lo``/``hi`` bounds (per-axis or scalar) tighten it to a real
+    domain. ``max_rows`` bounds the offending-row list on the error.
+
+    Contract-preserving by construction: under tracing it is a no-op
+    (tracers pass through — the jaxpr of ``query`` is identical with
+    validation on or off), and device-resident arrays pass through
+    unfetched (the one-host-sync contract owns the only transfer), so
+    only host-side inputs — the serving admission path, eager callers —
+    are actually inspected. Returns ``queries`` unchanged when clean.
+    """
+    if isinstance(queries, jax.core.Tracer) or isinstance(queries,
+                                                          jax.Array):
+        return queries
+    q = np.asarray(queries, np.float32)
+    nan = np.isnan(q).any(axis=-1)
+    inf = np.isinf(q).any(axis=-1)
+    finite = ~(nan | inf)
+    oob = finite & (np.abs(q) >= PARK_THRESHOLD).any(axis=-1)
+    if lo is not None:
+        oob |= finite & (q < np.asarray(lo, np.float32)).any(axis=-1)
+    if hi is not None:
+        oob |= finite & (q > np.asarray(hi, np.float32)).any(axis=-1)
+    bad = nan | inf | oob
+    if bad.any():
+        reasons = {}
+        for name, mask in (("nan", nan), ("inf", inf), ("oob", oob)):
+            n = int(mask.sum())
+            if n:
+                reasons[name] = n
+        rows = np.flatnonzero(bad.reshape(-1))[:max_rows].tolist()
+        raise QueryError(reasons, rows, int(np.prod(bad.shape)))
+    return queries
+
+
 def query(index: NeighborIndex, queries) -> SearchResult:
     """Pure neighbor search: ``execute_plan(plan_query(...))``.
 
@@ -337,7 +388,13 @@ def query(index: NeighborIndex, queries) -> SearchResult:
     are in query order and exact (knn distances/counts identical to the
     eager ``NeighborSearch.query``; range mode returns a valid bounded-K
     in-radius subset per the paper's interface).
+
+    With ``REPRO_VALIDATE=1``, host-side ``queries`` are validated
+    (:func:`validate_queries`) before upload; tracers and device arrays
+    pass through untouched, so jaxprs and sync counts are unchanged.
     """
+    if _validate_enabled():
+        queries = validate_queries(queries)
     return execute_plan(index, queries, plan_query(index, queries))
 
 
@@ -424,6 +481,7 @@ def searcher_cache_clear() -> None:
 __all__ = [
     "GridSpec",
     "NeighborIndex",
+    "QueryError",
     "QueryPlan",
     "SearchOpts",
     "SearchParams",
@@ -439,4 +497,5 @@ __all__ = [
     "searcher_cache_clear",
     "searcher_cache_stats",
     "update_index",
+    "validate_queries",
 ]

@@ -41,6 +41,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .. import obs
+from ..reliability import faults
 from .bundle import bundle_query_sel
 from .partition import (PartitionPlan, compute_megacells,
                         inflate_plan_inputs, plan_partitions, trivial_plan)
@@ -288,6 +289,7 @@ class QueryExecutor:
             self._launcher_cache.move_to_end(key)
             self._last["launcher_cache_hit"] = True
             return launcher
+        faults.maybe_fail("compile")
         self._last["compilations"] += 1
         searcher = ns._searcher()
         spec, radius, k, tile = (ns.spec, ns.params.radius, ns.params.k,
@@ -356,6 +358,9 @@ class QueryExecutor:
         sp_query = obs.span("query", nq=nq)
         sp_query.__enter__()
         try:
+            # fault-injection seam (reliability.faults): a scheduled
+            # launch fault fails the dispatch before any device work
+            faults.maybe_fail("launch")
             return self._dispatch_pending(queries, nq, k, reuse, last,
                                           sp_query)
         except BaseException:
@@ -410,6 +415,7 @@ class QueryExecutor:
         """The pending result's one blocking sync + metric/report flush."""
         ns = self.ns
         out_idx, out_d2, out_cnt = arrays
+        faults.maybe_delay()          # injected straggler: sync is late
         with obs.span("sync"):
             jax.block_until_ready(arrays)
         sp_query.__exit__(None, None, None)

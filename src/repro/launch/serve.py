@@ -14,6 +14,21 @@ unified telemetry registry.
 The trace is deterministic per ``--seed`` (arrival process included), so
 two runs drain identical batch sequences — the property the serve tests
 pin down.
+
+**Chaos mode** (DESIGN.md section 11): with ``REPRO_FAULTS`` set (e.g.
+``REPRO_FAULTS=launch:0.2,straggler:0.1``) the same trace runs under
+seeded fault injection. The driver then acts as the reliability gate: it
+accounts every submitted request to exactly one terminal outcome
+({result, DeadlineExceeded, QueryError, Rejected, CircuitOpen, ...}),
+prints the outcome and injected-fault tables, and exits nonzero if ANY
+future hangs (fails to resolve within the timeout) or goes unaccounted.
+
+  REPRO_FAULTS=launch:0.2,straggler:0.1 \\
+      PYTHONPATH=src python -m repro.launch.serve --trace short
+
+``--trace short|full`` selects a canned trace size (short == the CI chaos
+smoke); ``--deadline-ms`` arms per-request server-side deadlines on the
+simulated arrival clock.
 """
 from __future__ import annotations
 
@@ -61,6 +76,12 @@ def main(argv=None):
                     help="run the LM generation demo (repro.launch."
                          "serve_lm) instead of the neighbor service")
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--trace", choices=("short", "full"), default=None,
+                    help="canned trace size: 'short' (the CI chaos smoke) "
+                         "or 'full' (the default-size trace)")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="per-request server-side deadline on the simulated "
+                         "arrival clock (0 = none)")
     ap.add_argument("--scenes", type=int, default=3)
     ap.add_argument("--signatures", type=int, default=2,
                     help="distinct (radius, K) request signatures in the mix")
@@ -80,17 +101,22 @@ def main(argv=None):
         return serve_lm.main(rest + (["--smoke"] if args.smoke else []))
     if rest:
         ap.error(f"unrecognized arguments: {' '.join(rest)}")
+    if args.trace == "short":
+        args.smoke = True
     if args.smoke:
         args.scenes, args.points = min(args.scenes, 2), 1200
         args.requests, args.qmax = 64, 32
 
     from repro import obs
-    from repro.serve import NeighborService, Rejected, ServeOpts
+    from repro.reliability import faults
+    from repro.serve import (CircuitOpen, NeighborService, QueryError,
+                             Rejected, ServeOpts)
 
     opts = ServeOpts(
         max_batch=args.max_batch,
         max_wait_s=(args.max_wait_ms / 1e3
-                    if args.max_wait_ms is not None else None))
+                    if args.max_wait_ms is not None else None),
+        deadline_s=args.deadline_ms / 1e3)
     svc = NeighborService(opts)
     scenes, signatures, trace = build_trace(args)
     # register + warm every (scene, signature) variant at the common
@@ -106,24 +132,52 @@ def main(argv=None):
 
     # drive the trace on a simulated arrival clock: submit each request at
     # its arrival time, pumping whenever the bucket deadline has passed;
-    # wall-clock (real) time is what QPS/latency are measured in
+    # wall-clock (real) time is what QPS/latency are measured in. Every
+    # submitted request is accounted to exactly ONE terminal outcome —
+    # the reliability taxonomy the chaos gate asserts on.
+    outcomes: dict[str, int] = {}
+
+    def account(name):
+        outcomes[name] = outcomes.get(name, 0) + 1
+
     futures, rejected = [], 0
     t_wall0 = time.perf_counter()
     now = 0.0
     for dt, sid, params, q in trace:
         now += dt
         try:
-            futures.append(svc.submit(sid, q, params, now=now))
+            futures.append(svc.submit(
+                sid, q, params, now=now,
+                deadline_s=args.deadline_ms / 1e3 or None))
         except Rejected:
             rejected += 1
             svc.pump(now=now, force=True)
-            futures.append(svc.submit(sid, q, params, now=now))
+            try:
+                futures.append(svc.submit(
+                    sid, q, params, now=now,
+                    deadline_s=args.deadline_ms / 1e3 or None))
+            except (Rejected, CircuitOpen, QueryError) as exc:
+                account(type(exc).__name__)
+        except (CircuitOpen, QueryError) as exc:
+            account(type(exc).__name__)
         svc.pump(now=now)
-    reports = svc.drain()
+    reports = svc.drain(now=now)
     wall = time.perf_counter() - t_wall0
 
+    # the zero-hung-futures gate: every admitted future must resolve —
+    # a TimeoutError here means a request was stranded, the one failure
+    # mode the reliability layer promises cannot happen
+    hung = 0
     for f in futures:
-        f.result(timeout=60.0)
+        try:
+            f.result(timeout=60.0)
+            account("result")
+        except TimeoutError:
+            hung += 1
+            account("HUNG")
+        except Exception as exc:
+            account(type(exc).__name__)
+
     st = svc.stats()
     n = len(futures)
     occ = sum(r.nq for r in reports) / max(
@@ -136,9 +190,27 @@ def main(argv=None):
           f"{rejected} rejected")
     print(f"serve: e2e latency p50={pct['p50'] * 1e3:.2f}ms "
           f"p95={pct['p95'] * 1e3:.2f}ms p99={pct['p99'] * 1e3:.2f}ms")
+
+    plan = faults.active()
+    accounted = sum(outcomes.values())
+    print("serve: outcomes " + ", ".join(
+        f"{k}={v}" for k, v in sorted(outcomes.items())) +
+        f" (accounted {accounted}/{len(trace)})")
+    if plan is not None:
+        inj = {k: v for k, v in plan.stats().items() if v}
+        print(f"serve: chaos plan {plan.spec()} injected {inj or 'nothing'}"
+              f", breakers {st['breakers'] or '{}'}"
+              f", retries={st.get('retries', 0)}"
+              f" stragglers={st.get('stragglers', 0)}"
+              f" expired={st.get('expired', 0)}")
     if obs.trace_enabled():
         print(obs.summary())
+    if hung or accounted != len(trace):
+        print(f"serve: FAILED — hung futures: {hung}, accounted "
+              f"{accounted}/{len(trace)}", file=sys.stderr)
+        return 1
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

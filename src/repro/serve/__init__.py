@@ -20,6 +20,9 @@ Quickstart::
     svc.drain()                      # or svc.start() for a background pump
     results = [f.result() for f in futs]
 """
+from ..reliability.errors import (Cancelled, CircuitOpen,  # noqa: F401
+                                  DeadlineExceeded, QueryError)
+from ..reliability.quality import ResultQuality  # noqa: F401
 from .batcher import (BatchReport, MicroBatcher, Request,  # noqa: F401
                       StagedBatch, split_result, stage_batch)
 from .registry import (SceneRecord, SceneRegistry,  # noqa: F401
@@ -29,10 +32,15 @@ from .service import (NeighborService, Rejected,  # noqa: F401
 
 __all__ = [
     "BatchReport",
+    "Cancelled",
+    "CircuitOpen",
+    "DeadlineExceeded",
     "MicroBatcher",
     "NeighborService",
+    "QueryError",
     "Rejected",
     "Request",
+    "ResultQuality",
     "SceneRecord",
     "SceneRegistry",
     "SceneVariant",

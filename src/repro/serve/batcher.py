@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import math
 
 import jax.numpy as jnp
 import numpy as np
@@ -39,7 +40,15 @@ class Request:
     total order every drain decision derives from). ``t_submit`` is the
     *scheduling* timestamp the bucket deadline ages against — simulated
     trace drivers may supply a virtual clock — while ``t_real`` is always
-    the monotonic wall time latency metrics are measured from."""
+    the monotonic wall time latency metrics are measured from.
+
+    ``deadline`` (same clock as ``t_submit``; None = no deadline) is the
+    server-side expiry: a request past it is dropped at bucket drain,
+    BEFORE launch, and its future fails with ``DeadlineExceeded``
+    (DESIGN.md section 11). ``degraded`` marks requests admitted under
+    the overload ladder cap (``ServeOpts.degrade``): they serve at a
+    reduced window and their responses carry a degraded
+    ``ResultQuality`` flag."""
 
     seq: int
     scene_id: object
@@ -49,10 +58,15 @@ class Request:
     future: object
     t_submit: float
     t_real: float
+    deadline: float | None = None
+    degraded: bool = False
 
     @property
     def nq(self) -> int:
         return int(self.queries.shape[0])
+
+    def expired(self, now: float) -> bool:
+        return self.deadline is not None and now >= self.deadline
 
 
 @dataclasses.dataclass(frozen=True)
@@ -125,6 +139,25 @@ class MicroBatcher:
             return 0.0
         return max(0.0, now - min(b.t_oldest
                                   for b in self._buckets.values()))
+
+    def _retry_after(self, mean_batch_s: float | None, max_batch: int,
+                     floor_s: float) -> float:
+        """Retry-after estimate for a rejected admission: roughly how
+        long until the current backlog has drained, from the mean recent
+        drain time. Hardened for cold start (DESIGN.md section 11): before
+        any drain has completed — or when the estimate is degenerate
+        (zero, negative, NaN, inf) — the configured ``floor_s`` is
+        returned instead of 0/NaN, so clients always get a usable
+        positive backoff hint."""
+        floor_s = max(float(floor_s), 1e-6)
+        if (mean_batch_s is None or not math.isfinite(mean_batch_s)
+                or mean_batch_s <= 0.0):
+            mean_batch_s = floor_s
+        backlog = self.pending_queries / max(int(max_batch), 1)
+        est = mean_batch_s * max(backlog, 1.0)
+        if not math.isfinite(est) or est <= 0.0:
+            return floor_s
+        return max(floor_s, est)
 
     # -- drain selection ----------------------------------------------------
 

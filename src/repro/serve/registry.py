@@ -53,7 +53,8 @@ class SceneVariant:
     per-scene cache handles the registry invalidates on evict).
     """
 
-    __slots__ = ("params", "opts", "searcher", "session", "fn", "warmed")
+    __slots__ = ("params", "opts", "searcher", "session", "fn", "warmed",
+                 "_quality")
 
     def __init__(self, params: SearchParams, opts: SearchOpts, *,
                  searcher: NeighborSearch | None = None, session=None):
@@ -63,6 +64,7 @@ class SceneVariant:
         self.session = session
         self.fn = _fresh_query_fn()
         self.warmed: set[int] = set()
+        self._quality: tuple[int, int] | None = None
 
     @property
     def index(self) -> api.NeighborIndex:
@@ -85,6 +87,21 @@ class SceneVariant:
             jax.block_until_ready(self.fn(self.index, dummy))
             self.warmed.add(pad_n)
         return pad_n
+
+    def quality_counters(self) -> tuple[int, int]:
+        """``(overflow, oob)`` device quality counters for responses served
+        off this variant (DESIGN.md section 11). A static scene's grid is
+        frozen after build, so its overflow scalar is fetched ONCE and
+        cached — no extra per-drain host sync; a session-backed scene reads
+        the host-side counters the session's packed telemetry already
+        published for the current frame (no device fetch at all)."""
+        if self.session is not None:
+            rep = self.session.report
+            return int(rep.overflow), int(rep.oob)
+        if self._quality is None:
+            self._quality = (
+                int(jax.device_get(self.searcher.index.grid.overflow)), 0)
+        return self._quality
 
     def compiled_programs(self) -> int:
         """Entries in the variant-private jit cache (tests assert re-warm

@@ -1,11 +1,14 @@
-"""Multi-tenant streaming neighbor-query service (DESIGN.md section 10).
+"""Multi-tenant streaming neighbor-query service (DESIGN.md sections
+10-11).
 
 ``NeighborService`` layers the serving contract over the functional core:
 
 * ``submit(scene_id, queries, params)`` admits a request and returns a
   :class:`ServeFuture` resolved at drain time. Admission is bounded: past
   the ``max_pending`` high-water mark the queue **rejects with
-  retry-after** (:class:`Rejected`) instead of growing without bound.
+  retry-after** (:class:`Rejected`) — or, with ``ServeOpts.degrade`` on,
+  admits the request at a reduced ladder level and flags the response
+  degraded (graceful degradation instead of rejection).
 * ``pump()`` drains every *due* signature bucket (see ``batcher``) as one
   concatenated launch through the scene's variant-private compiled
   ``api.query`` program — ONE blocking host sync per drained batch — with
@@ -16,23 +19,59 @@
   streaming callers; the synchronous surface stays fully deterministic for
   tests and the trace driver.
 
+**Failure paths are first-class** (``repro.reliability``, DESIGN.md
+section 11). Every admitted request resolves as exactly one of {result,
+``QueryError``, ``DeadlineExceeded``, ``Rejected``, ``CircuitOpen``}
+(plus ``Cancelled`` for caller-cancelled futures) — no future ever
+hangs:
+
+* inputs are validated at admission (``api.validate_queries``): NaN/inf/
+  sentinel-colliding rows fail with a structured ``QueryError`` before
+  they can poison a concatenated launch;
+* per-request server-side deadlines: an expired request is dropped at
+  bucket drain — BEFORE launch — and fails with ``DeadlineExceeded``
+  (counted as ``serve.expired``); a caller-cancelled future is likewise
+  dropped unlaunched, so a client that gave up cannot leak device work;
+* transient launch failures retry with exponential backoff + jitter
+  (bounded by ``ServeOpts.retries``);
+* a per-scene **circuit breaker** (``reliability.breaker``) opens after
+  ``breaker_n`` consecutive batch failures: the poisoned scene fails
+  fast (``CircuitOpen`` at submit and drain) while every other tenant
+  keeps draining; a half-open probe closes it once the scene recovers;
+* the background pump thread is crash-contained: an escaped exception
+  fails the in-flight futures, is counted (``serve.pump_restarts``),
+  and the pump restarts instead of dying and hanging every future;
+* every response carries :class:`~repro.reliability.ResultQuality`
+  derived from the scene's device overflow/oob counters
+  (``fut.quality``), so silently-truncated neighborhoods are flagged.
+
 Every stage feeds the unified telemetry layer (``repro.obs``, component
 ``serve``): queue-depth gauges, batch-occupancy histograms, end-to-end
-request latency percentiles, and the host-sync counter the one-sync
-contract is asserted against. ``obs.summary()`` over a serving process
-reads as the service dashboard.
+request latency percentiles, per-drain straggler detection (the shared
+``train.fault_tolerance.StragglerMonitor``), and the host-sync counter
+the one-sync contract is asserted against. ``obs.summary()`` over a
+serving process reads as the service dashboard.
 """
 from __future__ import annotations
 
 import collections
+import dataclasses
 import os
 import threading
 import time
 
 import jax
+import numpy as np
 
 from .. import obs
+from ..core import api
 from ..core.types import SearchOpts, SearchParams, SearchResult
+from ..reliability import faults
+from ..reliability.breaker import CircuitBreaker
+from ..reliability.errors import (Cancelled, CircuitOpen, DeadlineExceeded,
+                                  QueryError, is_transient)
+from ..reliability.quality import ResultQuality
+from ..train.fault_tolerance import StragglerMonitor
 from .batcher import BatchReport, MicroBatcher, Request, split_result, \
     stage_batch
 from .registry import SceneRegistry
@@ -47,7 +86,8 @@ def _env_float(name: str, default: float) -> float:
 
 
 class ServeOpts:
-    """Service knobs (env defaults, DESIGN.md section 4 ``REPRO_SERVE_*``).
+    """Service knobs (env defaults, DESIGN.md section 4 ``REPRO_SERVE_*``
+    / ``REPRO_DEADLINE_*``).
 
     ``max_pending``   admission high-water mark in pending *query rows*;
     ``max_batch``     max concatenated query rows per drained launch;
@@ -58,16 +98,53 @@ class ServeOpts:
                       syncing the oldest (0 = sync immediately after each
                       dispatch, i.e. no overlap);
     ``scenes``        registry capacity (resident scenes, LRU-evicted).
+
+    Reliability (section 11):
+
+    ``deadline_s``    default per-request server-side deadline
+                      (``REPRO_DEADLINE_MS``; 0 = none — ``submit``'s
+                      ``deadline_s`` overrides per request);
+    ``retries``       bounded retry budget for transient launch failures;
+    ``backoff_s``     base of the exponential backoff between retries
+                      (jittered x0.5-1.5);
+    ``breaker_n``     consecutive batch failures that open a scene's
+                      circuit breaker;
+    ``breaker_cooldown_s``  breaker cooldown before the half-open probe
+                      (doubles on failed probes);
+    ``retry_floor_s`` floor of the ``Rejected``/``CircuitOpen``
+                      retry-after estimate (the cold-start hardening of
+                      ``MicroBatcher._retry_after``);
+    ``validate``      validate query inputs at admission
+                      (``api.validate_queries`` -> ``QueryError``);
+    ``degrade``       overload mode: past ``max_pending`` admit at the
+                      reduced ``degrade_ladder`` (flagged degraded)
+                      instead of rejecting, up to ``degrade_hard`` x
+                      ``max_pending`` (past THAT, reject regardless);
+    ``seed``          deterministic seed of the retry jitter.
     """
 
     __slots__ = ("max_pending", "max_batch", "max_wait_s", "pipeline",
-                 "scenes")
+                 "scenes", "deadline_s", "retries", "backoff_s",
+                 "breaker_n", "breaker_cooldown_s", "retry_floor_s",
+                 "validate", "degrade", "degrade_ladder", "degrade_hard",
+                 "seed")
 
     def __init__(self, max_pending: int | None = None,
                  max_batch: int | None = None,
                  max_wait_s: float | None = None,
                  pipeline: int | None = None,
-                 scenes: int | None = None):
+                 scenes: int | None = None,
+                 deadline_s: float | None = None,
+                 retries: int | None = None,
+                 backoff_s: float | None = None,
+                 breaker_n: int | None = None,
+                 breaker_cooldown_s: float | None = None,
+                 retry_floor_s: float | None = None,
+                 validate: bool | None = None,
+                 degrade: bool | None = None,
+                 degrade_ladder: tuple = (1,),
+                 degrade_hard: float = 2.0,
+                 seed: int | None = None):
         self.max_pending = (_env_int("REPRO_SERVE_MAX_PENDING", 65536)
                             if max_pending is None else int(max_pending))
         self.max_batch = (_env_int("REPRO_SERVE_MAX_BATCH", 4096)
@@ -79,10 +156,38 @@ class ServeOpts:
                          if pipeline is None else int(pipeline))
         self.scenes = (_env_int("REPRO_SERVE_SCENES", 8)
                        if scenes is None else int(scenes))
+        self.deadline_s = (_env_float("REPRO_DEADLINE_MS", 0.0) / 1e3
+                           if deadline_s is None else float(deadline_s))
+        self.retries = (_env_int("REPRO_SERVE_RETRIES", 2)
+                        if retries is None else int(retries))
+        self.backoff_s = (_env_float("REPRO_SERVE_BACKOFF_MS", 1.0) / 1e3
+                          if backoff_s is None else float(backoff_s))
+        self.breaker_n = (_env_int("REPRO_SERVE_BREAKER_N", 3)
+                          if breaker_n is None else int(breaker_n))
+        self.breaker_cooldown_s = (
+            _env_float("REPRO_SERVE_BREAKER_COOLDOWN_MS", 50.0) / 1e3
+            if breaker_cooldown_s is None else float(breaker_cooldown_s))
+        self.retry_floor_s = (
+            _env_float("REPRO_SERVE_RETRY_FLOOR_MS", 1.0) / 1e3
+            if retry_floor_s is None else float(retry_floor_s))
+        self.validate = (_env_int("REPRO_SERVE_VALIDATE", 1) != 0
+                         if validate is None else bool(validate))
+        self.degrade = (_env_int("REPRO_SERVE_DEGRADE", 0) != 0
+                        if degrade is None else bool(degrade))
+        self.degrade_ladder = tuple(int(w) for w in degrade_ladder)
+        self.degrade_hard = float(degrade_hard)
+        self.seed = (_env_int("REPRO_SERVE_SEED", 0)
+                     if seed is None else int(seed))
         if self.max_batch < 1 or self.max_pending < 1:
             raise ValueError("max_batch and max_pending must be >= 1")
         if self.pipeline < 0:
             raise ValueError("pipeline must be >= 0")
+        if self.retries < 0:
+            raise ValueError("retries must be >= 0")
+        if self.breaker_n < 1:
+            raise ValueError("breaker_n must be >= 1")
+        if self.degrade_hard < 1.0:
+            raise ValueError("degrade_hard must be >= 1.0")
 
 
 class Rejected(RuntimeError):
@@ -97,26 +202,64 @@ class Rejected(RuntimeError):
 
 
 class ServeFuture:
-    """Result handle resolved when the request's batch drains."""
+    """Result handle resolved when the request's batch drains.
 
-    __slots__ = ("_event", "_result", "_exc", "request_id")
+    Resolution is **idempotent and single-shot**: the first
+    ``set_result``/``set_exception`` wins and later ones are ignored, so
+    a crash-containment path can never clobber an already-resolved
+    future. ``cancel()`` lets a caller that gave up (e.g. after a
+    ``result(timeout)`` timeout) withdraw the request: a cancelled
+    request is dropped at bucket drain WITHOUT being launched (counted
+    as ``serve.expired``), instead of leaking staged device work.
+
+    ``quality`` carries the :class:`~repro.reliability.ResultQuality`
+    flags of a successful resolution (None until resolved / on error).
+    """
+
+    __slots__ = ("_event", "_result", "_exc", "_cancelled", "_lock",
+                 "request_id", "quality")
 
     def __init__(self, request_id: int):
         self.request_id = request_id
         self._event = threading.Event()
         self._result: SearchResult | None = None
         self._exc: BaseException | None = None
+        self._cancelled = False
+        self._lock = threading.Lock()
+        self.quality: ResultQuality | None = None
 
     def done(self) -> bool:
         return self._event.is_set()
 
-    def set_result(self, result: SearchResult) -> None:
-        self._result = result
-        self._event.set()
+    def cancelled(self) -> bool:
+        return self._cancelled
+
+    def cancel(self) -> bool:
+        """Withdraw the request if it has not resolved yet; returns True
+        when the cancellation won (the drain will drop it unlaunched)."""
+        with self._lock:
+            if self._event.is_set():
+                return False
+            self._cancelled = True
+            self._exc = Cancelled(self.request_id)
+            self._event.set()
+            return True
+
+    def set_result(self, result: SearchResult,
+                   quality: ResultQuality | None = None) -> None:
+        with self._lock:
+            if self._event.is_set():
+                return
+            self._result = result
+            self.quality = quality
+            self._event.set()
 
     def set_exception(self, exc: BaseException) -> None:
-        self._exc = exc
-        self._event.set()
+        with self._lock:
+            if self._event.is_set():
+                return
+            self._exc = exc
+            self._event.set()
 
     def exception(self) -> BaseException | None:
         return self._exc if self._event.is_set() else None
@@ -131,15 +274,24 @@ class ServeFuture:
 
 
 class _InFlight:
-    """One dispatched, not-yet-synced batch riding the drain pipeline."""
+    """One dispatched, not-yet-synced batch riding the drain pipeline.
 
-    __slots__ = ("staged", "result", "t_dispatch", "compiled")
+    Carries its bucket ``key``/``requests`` and dispatch ``attempt`` so
+    a transient failure surfacing at sync time can be re-dispatched
+    under the same bounded retry budget as a dispatch-time failure.
+    """
 
-    def __init__(self, staged, result, t_dispatch, compiled):
+    __slots__ = ("key", "staged", "result", "t_dispatch", "compiled",
+                 "attempt")
+
+    def __init__(self, key, staged, result, t_dispatch, compiled,
+                 attempt=0):
+        self.key = key
         self.staged = staged
         self.result = result
         self.t_dispatch = t_dispatch
         self.compiled = compiled
+        self.attempt = attempt
 
 
 class NeighborService:
@@ -166,6 +318,12 @@ class NeighborService:
         self._batch_s = collections.deque(maxlen=32)   # recent drain times
         self._thread: threading.Thread | None = None
         self._stop_event = threading.Event()
+        # reliability state (DESIGN.md section 11): one breaker per scene,
+        # the repo-shared straggler detector over per-drain durations, and
+        # a seeded jitter stream for the retry backoff
+        self._breakers: dict = {}
+        self._straggler = StragglerMonitor()
+        self._jitter_rng = np.random.default_rng(self.opts.seed)
 
     # -- scene management ---------------------------------------------------
 
@@ -189,40 +347,82 @@ class NeighborService:
 
     def _retry_after(self) -> float:
         mean_batch = (sum(self._batch_s) / len(self._batch_s)
-                      if self._batch_s else self.opts.max_wait_s)
-        backlog = self._batcher.pending_queries / max(self.opts.max_batch, 1)
-        return max(self.opts.max_wait_s, mean_batch * max(backlog, 1.0))
+                      if self._batch_s else None)
+        return self._batcher._retry_after(mean_batch, self.opts.max_batch,
+                                          max(self.opts.retry_floor_s,
+                                              self.opts.max_wait_s))
+
+    def _breaker(self, scene_id) -> CircuitBreaker:
+        br = self._breakers.get(scene_id)
+        if br is None:
+            br = self._breakers[scene_id] = CircuitBreaker(
+                threshold=self.opts.breaker_n,
+                cooldown_s=self.opts.breaker_cooldown_s)
+        return br
 
     def submit(self, scene_id, queries, params: SearchParams,
                opts: SearchOpts = SearchOpts(), *,
-               now: float | None = None) -> ServeFuture:
+               now: float | None = None,
+               deadline_s: float | None = None) -> ServeFuture:
         """Admit one request; returns its future (resolved at drain time).
 
-        Raises ``KeyError`` for a non-resident scene and :class:`Rejected`
-        past the ``max_pending`` high-water mark. ``now`` overrides the
-        admission timestamp (simulated-clock trace drivers).
+        Raises ``KeyError`` for a non-resident scene, ``QueryError`` for
+        unservable inputs (NaN/inf/sentinel rows — rejected BEFORE they
+        can reach a concatenated launch), ``CircuitOpen`` while the
+        scene's breaker is open, and :class:`Rejected` past the
+        ``max_pending`` high-water mark (unless ``ServeOpts.degrade``
+        admits it at a reduced ladder level instead). ``now`` overrides
+        the admission timestamp (simulated-clock trace drivers);
+        ``deadline_s`` the per-request server-side deadline (default
+        ``ServeOpts.deadline_s``; 0/None = none).
         """
-        import numpy as np
-
         q = np.asarray(queries, np.float32)
         if q.ndim != 2 or q.shape[1] != 3:
             raise ValueError(f"queries must be [nq, 3], got {q.shape}")
+        # fault-injection seam: a scheduled poison corrupts the admitted
+        # rows (a byzantine client) — validation below must catch it
+        q = faults.maybe_poison(q, scene=scene_id)
+        if self.opts.validate:
+            try:
+                api.validate_queries(q)
+            except QueryError:
+                self._metrics.count("query_errors")
+                raise
         with self._lock:
             if scene_id not in self.registry:
                 raise KeyError(f"scene {scene_id!r} is not resident — "
                                "register_scene first")
+            t_real = time.monotonic()
+            t_sched = t_real if now is None else float(now)
+            br = self._breakers.get(scene_id)
+            if br is not None and not br.submit_allowed(t_sched):
+                self._metrics.count("circuit_open")
+                raise CircuitOpen(scene_id, max(br.retry_after(t_sched),
+                                                self.opts.retry_floor_s))
+            degraded = False
             pending = self._batcher.pending_queries
             if pending + q.shape[0] > self.opts.max_pending:
-                self._metrics.count("rejected")
-                raise Rejected(pending, self.opts.max_pending,
-                               self._retry_after())
+                hard = int(self.opts.max_pending * self.opts.degrade_hard)
+                if self.opts.degrade and pending + q.shape[0] <= hard:
+                    # overload mode: serve at the reduced ladder level,
+                    # flagged degraded, instead of rejecting
+                    degraded = True
+                    opts = dataclasses.replace(
+                        opts, w_ladder=self.opts.degrade_ladder)
+                    self._metrics.count("degraded_admissions")
+                else:
+                    self._metrics.count("rejected")
+                    raise Rejected(pending, self.opts.max_pending,
+                                   self._retry_after())
+            ddl = self.opts.deadline_s if deadline_s is None \
+                else float(deadline_s)
             self._seq += 1
             fut = ServeFuture(self._seq)
-            t_real = time.monotonic()
             req = Request(seq=self._seq, scene_id=scene_id, params=params,
                           opts=opts, queries=q, future=fut,
-                          t_submit=t_real if now is None else float(now),
-                          t_real=t_real)
+                          t_submit=t_sched, t_real=t_real,
+                          deadline=(t_sched + ddl if ddl else None),
+                          degraded=degraded)
             self._batcher.add(req)
             self._metrics.count("requests")
             self._metrics.count("query_rows", q.shape[0])
@@ -236,11 +436,40 @@ class NeighborService:
 
     # -- drain --------------------------------------------------------------
 
-    def _dispatch(self, key, requests) -> _InFlight:
+    def _drop_dead(self, requests, now: float) -> list:
+        """Filter a drained bucket down to launchable requests: expired
+        deadlines fail with ``DeadlineExceeded`` and cancelled/already-
+        resolved futures are dropped — all BEFORE any staging or launch,
+        counted as ``serve.expired``."""
+        live = []
+        for r in requests:
+            if r.future.done():                  # caller-cancelled
+                self._metrics.count("cancelled")
+            elif r.expired(now):
+                r.future.set_exception(
+                    DeadlineExceeded(r.seq, r.deadline, now))
+                self._metrics.count("expired")
+            else:
+                live.append(r)
+        return live
+
+    def _fail_requests(self, requests, exc: BaseException) -> None:
+        for r in requests:
+            r.future.set_exception(exc)
+
+    def _backoff(self, attempt: int) -> None:
+        base = self.opts.backoff_s * (2.0 ** attempt)
+        time.sleep(min(base * (0.5 + float(self._jitter_rng.random())),
+                       0.25))
+
+    def _dispatch(self, key, requests, attempt: int = 0) -> _InFlight:
         """Stage (host concat/pad/upload) and asynchronously dispatch one
         batch through the scene variant's compiled serve program."""
         scene_id, params, sopts = key
         variant = self.registry.resolve(scene_id, params, sopts)
+        # fault-injection seam: a scheduled launch fault fails the batch
+        # before any device work (retried by _run_batch)
+        faults.maybe_fail("launch", scene=scene_id)
         staged = stage_batch(key, requests,
                              variant.pad_to_bucket(
                                  sum(r.nq for r in requests)))
@@ -251,12 +480,47 @@ class NeighborService:
         if compiled:
             variant.warmed.add(staged.pad_n)
             obs.record_span("compile", time.perf_counter() - t0)
-        return _InFlight(staged, result, t0, compiled)
+        return _InFlight(key, staged, result, t0, compiled, attempt)
+
+    def _run_batch(self, key, requests, now: float) -> _InFlight | None:
+        """Dispatch one batch with the bounded transient-retry policy.
+
+        Returns the in-flight record, or None when the batch failed
+        permanently — in which case its futures are already failed and
+        the scene's breaker has recorded the failure.
+        """
+        scene_id = key[0]
+        attempt = 0
+        while True:
+            try:
+                return self._dispatch(key, requests, attempt)
+            except KeyError as exc:
+                # scene evicted between admission and drain: fail the
+                # batch's futures, keep serving (not a scene *fault* —
+                # the breaker does not count residency churn)
+                self._fail_requests(
+                    requests, KeyError(f"scene {key[0]!r} evicted before "
+                                       f"drain: {exc}"))
+                self._metrics.count("failed_batches")
+                return None
+            except Exception as exc:
+                if is_transient(exc) and attempt < self.opts.retries:
+                    attempt += 1
+                    self._metrics.count("retries")
+                    self._backoff(attempt - 1)
+                    continue
+                self._fail_requests(requests, exc)
+                self._metrics.count("failed_batches")
+                self._metrics.count("launch_failures")
+                if self._breaker(scene_id).record_failure(now):
+                    self._metrics.count("breaker_trips")
+                return None
 
     def _finish(self, flight: _InFlight, now_fn=time.monotonic) -> None:
         """The drained batch's ONE blocking host sync, then future
         resolution (device-sliced views — no further transfer)."""
         res = flight.result
+        faults.maybe_delay(scene=flight.key[0])   # injected straggler
         with obs.span("sync"):
             jax.block_until_ready((res.indices, res.distances2, res.counts))
         self._metrics.count("host_syncs")
@@ -264,15 +528,56 @@ class NeighborService:
         dt = time.perf_counter() - flight.t_dispatch
         self._batch_s.append(dt)
         self._metrics.observe("batch_s", dt)
+        # per-drain straggler detection: the repo-shared EMA monitor
+        # (train.fault_tolerance) flags drains stalling >> steady state
+        if self._straggler.observe(dt):
+            self._metrics.count("stragglers")
+        if self._straggler.ema is not None:
+            self._metrics.gauge("batch_ema_s", self._straggler.ema)
         staged = flight.staged
         self._metrics.observe("batch_queries", staged.nq)
         self._metrics.observe("batch_requests", len(staged.requests))
         self._metrics.observe("batch_occupancy", staged.nq / staged.pad_n)
+        scene_id, params, sopts = flight.key
+        try:
+            overflow, oob = self.registry.resolve(
+                scene_id, params, sopts).quality_counters()
+        except KeyError:               # evicted mid-flight; results stand
+            overflow, oob = 0, 0
         now = now_fn()
         for req, res_i in zip(staged.requests, split_result(staged, res)):
-            req.future.set_result(res_i)
+            quality = ResultQuality.from_counters(
+                overflow=overflow, oob=oob, reduced_ladder=req.degraded)
+            if quality.degraded:
+                self._metrics.count("degraded_responses")
+            req.future.set_result(res_i, quality)
             self._metrics.observe("request_s", max(0.0, now - req.t_real))
         self._metrics.count("resolved", len(staged.requests))
+
+    def _finish_safe(self, flight: _InFlight, now: float) -> None:
+        """Sync one in-flight batch, converting failures surfacing at
+        sync time into the same bounded-retry / fail-futures / breaker
+        policy as dispatch-time failures — a batch can never leave its
+        futures unresolved."""
+        scene_id = flight.key[0]
+        try:
+            self._finish(flight)
+        except Exception as exc:
+            if is_transient(exc) and flight.attempt < self.opts.retries:
+                self._metrics.count("retries")
+                self._backoff(flight.attempt)
+                retry = self._run_batch(flight.key, flight.staged.requests,
+                                        now)
+                if retry is not None:
+                    retry.attempt = max(retry.attempt, flight.attempt + 1)
+                    self._finish_safe(retry, now)
+                return
+            self._fail_requests(flight.staged.requests, exc)
+            self._metrics.count("failed_batches")
+            if self._breaker(scene_id).record_failure(now):
+                self._metrics.count("breaker_trips")
+            return
+        self._breaker(scene_id).record_success()
 
     def pump(self, now: float | None = None, *,
              force: bool = False) -> list[BatchReport]:
@@ -283,55 +588,85 @@ class NeighborService:
         stay in flight while the next one is staged on the host, and each
         batch's single blocking sync happens only when it leaves the
         pipeline (or at the end of the pump).
+
+        Crash containment: if anything escapes the drain loop, every
+        in-flight/taken request's future is failed with the escaping
+        exception before it propagates — a pump crash can never strand a
+        future unresolved.
         """
         with self._lock:
             now = time.monotonic() if now is None else float(now)
             reports: list[BatchReport] = []
             inflight: collections.deque = collections.deque()
-            with obs.span("pump", forced=force):
-                while True:
-                    taken = self._batcher.take(
-                        now, max_wait=self.opts.max_wait_s,
-                        max_batch=self.opts.max_batch, force=force)
-                    if taken is None:
-                        break
-                    key, requests = taken
-                    with obs.span("launch", scene=str(key[0]),
-                                  requests=len(requests)):
-                        try:
-                            flight = self._dispatch(key, requests)
-                        except KeyError as exc:
-                            # scene evicted between admission and drain:
-                            # fail the batch's futures, keep serving
-                            for r in requests:
-                                r.future.set_exception(
-                                    KeyError(f"scene {key[0]!r} evicted "
-                                             f"before drain: {exc}"))
-                            self._metrics.count("failed_batches")
+            current: list = []
+            try:
+                with obs.span("pump", forced=force):
+                    while True:
+                        taken = self._batcher.take(
+                            now, max_wait=self.opts.max_wait_s,
+                            max_batch=self.opts.max_batch, force=force)
+                        if taken is None:
+                            break
+                        key, current = taken
+                        requests = self._drop_dead(current, now)
+                        if not requests:
+                            current = []
                             continue
-                    scene_id, params, _sopts = key
-                    reports.append(BatchReport(
-                        scene_id=scene_id, params=params,
-                        seqs=tuple(r.seq for r in requests),
-                        nq=flight.staged.nq, pad_n=flight.staged.pad_n))
-                    inflight.append(flight)
-                    # dispatch-then-stage: sync the OLDEST in-flight batch
-                    # only once the pipeline is over depth, so the next
-                    # iteration's staging overlapped this batch's execution
-                    while len(inflight) > self.opts.pipeline:
-                        self._finish(inflight.popleft())
-                while inflight:
-                    self._finish(inflight.popleft())
-            self._gauge_depth()
+                        scene_id = key[0]
+                        br = self._breaker(scene_id)
+                        if not br.allow(now):
+                            # breaker open: isolate this scene — fail its
+                            # batch fast, keep draining the others
+                            self._fail_requests(requests, CircuitOpen(
+                                scene_id, max(br.retry_after(now),
+                                              self.opts.retry_floor_s)))
+                            self._metrics.count("circuit_open",
+                                                len(requests))
+                            current = []
+                            continue
+                        with obs.span("launch", scene=str(scene_id),
+                                      requests=len(requests)):
+                            flight = self._run_batch(key, requests, now)
+                        current = []
+                        if flight is None:
+                            continue
+                        scene_id_k, params, _sopts = key
+                        reports.append(BatchReport(
+                            scene_id=scene_id_k, params=params,
+                            seqs=tuple(r.seq for r in requests),
+                            nq=flight.staged.nq, pad_n=flight.staged.pad_n))
+                        inflight.append(flight)
+                        # dispatch-then-stage: sync the OLDEST in-flight
+                        # batch only once the pipeline is over depth, so
+                        # the next iteration's staging overlapped this
+                        # batch's execution
+                        while len(inflight) > self.opts.pipeline:
+                            self._finish_safe(inflight.popleft(), now)
+                    while inflight:
+                        self._finish_safe(inflight.popleft(), now)
+            except BaseException as exc:
+                # crash containment: no future may hang on a pump crash
+                for r in current:
+                    r.future.set_exception(exc)
+                for fl in inflight:
+                    self._fail_requests(fl.staged.requests, exc)
+                self._metrics.count("pump_crashes")
+                raise
+            finally:
+                self._gauge_depth()
             return reports
 
-    def drain(self) -> list[BatchReport]:
-        """Force-pump until the admission queue is empty."""
+    def drain(self, now: float | None = None) -> list[BatchReport]:
+        """Force-pump until the admission queue is empty. ``now`` pins the
+        scheduling clock (simulated-clock drivers must drain on the same
+        clock their deadlines were set against)."""
         reports: list[BatchReport] = []
         while True:
-            got = self.pump(force=True)
+            got = self.pump(now, force=True)
             if not got:
-                break
+                if self._batcher.empty():
+                    break
+                continue                 # only dead/isolated buckets drained
             reports.extend(got)
         return reports
 
@@ -340,7 +675,10 @@ class NeighborService:
     def start(self, poll_s: float | None = None) -> None:
         """Run the pump on a daemon thread (real streaming callers). The
         thread wakes every ``poll_s`` (default: half the bucket deadline)
-        and drains whatever is due."""
+        and drains whatever is due. Crash-contained: an exception escaping
+        ``pump()`` (whose own handler already failed the in-flight
+        futures) is counted as ``serve.pump_restarts`` and the loop keeps
+        pumping instead of dying silently."""
         if self._thread is not None:
             return
         period = poll_s if poll_s is not None else \
@@ -349,7 +687,10 @@ class NeighborService:
 
         def loop():
             while not self._stop_event.wait(period):
-                self.pump()
+                try:
+                    self.pump()
+                except Exception:
+                    self._metrics.count("pump_restarts")
 
         self._thread = threading.Thread(target=loop, name="repro-serve-pump",
                                         daemon=True)
@@ -369,11 +710,18 @@ class NeighborService:
     def queue_depth(self) -> int:
         return self._batcher.pending_requests
 
+    def breaker_state(self, scene_id) -> str:
+        """The scene's circuit-breaker state ("closed" when untracked)."""
+        br = self._breakers.get(scene_id)
+        return br.state if br is not None else "closed"
+
     def stats(self) -> dict:
         nreq, nq = self._batcher.queue_depth()
         return {
             **self._metrics.counters(),
             "queue_depth": nreq,
             "queue_queries": nq,
+            "breakers": {sid: br.state
+                         for sid, br in self._breakers.items()},
             "registry": self.registry.stats(),
         }

@@ -339,6 +339,7 @@ def test_one_shot_cache_reuses_searcher(rng):
 API_SNAPSHOT = (
     "GridSpec",
     "NeighborIndex",
+    "QueryError",
     "QueryPlan",
     "SearchOpts",
     "SearchParams",
@@ -354,6 +355,7 @@ API_SNAPSHOT = (
     "searcher_cache_clear",
     "searcher_cache_stats",
     "update_index",
+    "validate_queries",
 )
 
 

@@ -1,0 +1,650 @@
+"""Reliability layer tests (repro.reliability + serve failure paths,
+DESIGN.md section 11).
+
+The contracts:
+
+1. **determinism of chaos** — a seeded ``FaultPlan`` injects the same
+   faults at the same decision points on every run (hash decisions, spec
+   round-trip, budgets, per-scene scoping);
+2. **no future ever hangs** — under a seeded chaos plan (launch failures,
+   stragglers, poisoned inputs) every submitted request resolves as
+   exactly one of {result, DeadlineExceeded, QueryError, Rejected,
+   CircuitOpen, InjectedFault} with bitwise parity to ``api.query`` on
+   every non-degraded success, and with ``REPRO_FAULTS`` unset the jaxprs
+   and host-sync counts are identical to the fault-free build;
+3. **failure handling** — deadlines expire queued work BEFORE launch,
+   cancelled futures never launch, transient launch failures retry with
+   bounded backoff, a poisoned scene's circuit breaker isolates it while
+   healthy tenants keep draining, and a crashed pump fails its in-flight
+   futures instead of stranding them;
+4. **graceful degradation** — invalid inputs fail structured
+   (``QueryError``), overload serves at a reduced ladder level flagged
+   via ``ResultQuality``, and device overflow/oob counters reach the
+   per-response quality flags.
+"""
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.api as api
+from repro import obs
+from repro.core import SearchOpts, SearchParams, SimulationSession
+from repro.reliability import (CircuitBreaker, CircuitOpen,
+                               DeadlineExceeded, FaultPlan, InjectedFault,
+                               QueryError, ResultQuality, faults,
+                               is_transient)
+from repro.reliability.errors import Cancelled, TransientFault
+from repro.serve import MicroBatcher, NeighborService, Rejected, ServeOpts
+
+P_A = SearchParams(radius=0.11, k=8, knn_window="exact")
+P_B = SearchParams(radius=0.15, k=4, knn_window="exact")
+
+
+@pytest.fixture(autouse=True)
+def clean(monkeypatch):
+    monkeypatch.delenv("REPRO_FAULTS", raising=False)
+    monkeypatch.delenv("REPRO_VALIDATE", raising=False)
+    obs.reset()
+    faults.configure(None)
+    yield
+    faults.configure(None)
+    obs.configure()
+    obs.reset()
+
+
+def _assert_bitwise(got, ref):
+    np.testing.assert_array_equal(np.asarray(got.indices),
+                                  np.asarray(ref.indices))
+    np.testing.assert_array_equal(np.asarray(got.counts),
+                                  np.asarray(ref.counts))
+    da = np.where(np.isinf(np.asarray(got.distances2)), -1.0,
+                  np.asarray(got.distances2))
+    db = np.where(np.isinf(np.asarray(ref.distances2)), -1.0,
+                  np.asarray(ref.distances2))
+    np.testing.assert_array_equal(da, db)
+
+
+def _svc(rng, n=600, scene="s", **kw):
+    pts = rng.random((n, 3)).astype(np.float32)
+    svc = NeighborService(ServeOpts(**kw))
+    svc.register_scene(scene, pts)
+    return svc, pts
+
+
+# ------------------------------------------------- fault-plan determinism
+
+
+def test_fault_plan_deterministic_and_parse():
+    spec = "launch:0.2,straggler:0.1,poison:0.05,seed:7,delay_ms:2"
+    a, b = FaultPlan.parse(spec), FaultPlan.parse(spec)
+    assert a.rates["launch"] == 0.2 and a.seed == 7
+    assert a.delay_s == pytest.approx(0.002)
+    fired_a = [a.decide("launch") for _ in range(300)]
+    fired_b = [b.decide("launch") for _ in range(300)]
+    assert fired_a == fired_b                       # same seeded schedule
+    n_fired = sum(x is not None for x in fired_a)
+    assert 20 <= n_fired <= 100                     # ~20% of 300
+    # different seed -> different schedule
+    c = FaultPlan(launch=0.2, seed=8)
+    assert [c.decide("launch") for _ in range(300)] != fired_a
+    with pytest.raises(ValueError):
+        FaultPlan(launch=1.5)
+    with pytest.raises(ValueError):
+        FaultPlan.parse("bogus:1")
+
+
+def test_fault_plan_budget_and_scene_scope():
+    plan = FaultPlan(launch=1.0, budgets={"launch": 2})
+    fired = [plan.decide("launch") for _ in range(10)]
+    assert sum(x is not None for x in fired) == 2   # budget caps injections
+    # scoped to one scene: other tenants never fire AND don't consume
+    # decisions, so the victim's schedule is traffic-independent
+    scoped_plan = FaultPlan(launch=1.0, scene="bad")
+    assert scoped_plan.decide("launch", scene="healthy") is None
+    assert scoped_plan.decide("launch", scene="bad") == 0
+    assert scoped_plan.stats()["decisions"]["launch"] == 1
+    rt = FaultPlan.parse(scoped_plan.spec())        # spec round-trips
+    assert rt.rates == scoped_plan.rates and rt.scene == "bad"
+
+
+def test_fault_hooks_noop_without_plan():
+    faults.maybe_fail("launch")                     # must not raise
+    assert faults.maybe_delay() == 0.0
+    q = np.zeros((4, 3), np.float32)
+    assert faults.maybe_poison(q) is q              # no copy, no mutation
+    with faults.scoped(FaultPlan(launch=1.0)):
+        with pytest.raises(InjectedFault) as ei:
+            faults.maybe_fail("launch")
+        assert is_transient(ei.value)
+        assert isinstance(ei.value, TransientFault)
+    faults.maybe_fail("launch")                     # scope restored
+
+
+# ------------------------------------------ retry-after cold start (sat 2)
+
+
+def test_retry_after_cold_start_floor():
+    """Before any drain has completed the retry-after estimate must fall
+    back to the configured floor — not 0 or NaN."""
+    mb = MicroBatcher()
+    floor = 0.002
+    assert mb._retry_after(None, 64, floor) == floor          # no history
+    assert mb._retry_after(float("nan"), 64, floor) == floor  # degenerate
+    assert mb._retry_after(0.0, 64, floor) == floor
+    assert mb._retry_after(-1.0, 64, floor) == floor
+    assert mb._retry_after(float("inf"), 64, floor) == floor
+    # with real history the estimate scales with the backlog, floored
+    est = mb._retry_after(0.010, 64, floor)
+    assert est == pytest.approx(0.010)              # empty queue: one batch
+    assert mb._retry_after(1e-9, 64, floor) == floor
+
+
+def test_rejected_carries_positive_retry_after_cold(rng):
+    """A service rejecting before its FIRST drain (cold start) still hands
+    back a usable positive retry-after."""
+    svc, _ = _svc(rng, max_pending=10)
+    with pytest.raises(Rejected) as ei:
+        svc.submit("s", rng.random((40, 3)).astype(np.float32), P_A)
+    assert ei.value.retry_after_s > 0
+    assert np.isfinite(ei.value.retry_after_s)
+
+
+# ------------------------------------------------------- input validation
+
+
+def test_validate_queries_structured_errors(rng):
+    clean = rng.random((16, 3)).astype(np.float32)
+    assert api.validate_queries(clean) is clean
+    bad = clean.copy()
+    bad[3, 1] = np.nan
+    bad[7] = np.inf
+    with pytest.raises(QueryError) as ei:
+        api.validate_queries(bad)
+    assert ei.value.reasons.get("nan", 0) >= 1
+    assert ei.value.reasons.get("inf", 0) >= 1
+    assert 3 in ei.value.rows and 7 in ei.value.rows
+    # sentinel-colliding magnitudes are out of domain (PARK_THRESHOLD)
+    park = clean.copy()
+    park[0, 0] = 2e29
+    with pytest.raises(QueryError) as ei:
+        api.validate_queries(park)
+    assert ei.value.reasons == {"oob": 1}
+    # explicit domain bounds
+    with pytest.raises(QueryError):
+        api.validate_queries(clean, lo=0.5)
+    # tracers and device arrays pass through untouched
+    dev = jnp.asarray(clean)
+    assert api.validate_queries(dev) is dev
+
+
+def test_validation_env_knob_preserves_jaxpr_and_syncs(rng, monkeypatch):
+    """REPRO_VALIDATE=1 must not change traced programs: validation runs
+    host-side pre-upload only, so the jaxpr is identical to the knob off
+    (test_obs.py style)."""
+    pts = rng.random((500, 3)).astype(np.float32)
+    index = api.build_index(pts, P_A)
+    qs = jnp.asarray(rng.random((64, 3)).astype(np.float32))
+    monkeypatch.setenv("REPRO_VALIDATE", "0")
+    jaxpr_off = str(jax.make_jaxpr(api.query)(index, qs))
+    monkeypatch.setenv("REPRO_VALIDATE", "1")
+    jaxpr_on = str(jax.make_jaxpr(api.query)(index, qs))
+    assert jaxpr_off == jaxpr_on
+
+
+def test_poisoned_submission_fails_structured_not_launched(rng):
+    """An injected poison (NaN row) is caught at admission: QueryError,
+    no future created, nothing launched."""
+    svc, _ = _svc(rng)
+    with faults.scoped(FaultPlan(poison=1.0)):
+        with pytest.raises(QueryError):
+            svc.submit("s", rng.random((8, 3)).astype(np.float32), P_A)
+    st = svc.stats()
+    assert st["query_errors"] == 1
+    assert st.get("batches", 0) == 0 and svc.queue_depth() == 0
+
+
+# ------------------------------------------------ deadlines + cancellation
+
+
+def test_deadline_expired_dropped_before_launch(rng):
+    """Satellite 1: a request whose deadline passed while queued fails
+    with DeadlineExceeded at bucket drain, BEFORE any launch, and is
+    counted under serve.expired."""
+    svc, _ = _svc(rng)
+    q = rng.random((8, 3)).astype(np.float32)
+    fut = svc.submit("s", q, P_A, now=0.0, deadline_s=1.0)
+    live = svc.submit("s", q, P_A, now=5.0, deadline_s=100.0)
+    svc.drain(now=5.0)                              # 5.0 >= 0.0 + 1.0
+    assert isinstance(fut.exception(), DeadlineExceeded)
+    with pytest.raises(DeadlineExceeded):
+        fut.result()
+    assert live.exception() is None and live.done()
+    st = svc.stats()
+    assert st["expired"] == 1
+    assert st["batches"] == 1                       # only the live request
+    assert st["resolved"] == 1
+
+
+def test_cancelled_future_never_launches(rng):
+    svc, _ = _svc(rng)
+    q = rng.random((8, 3)).astype(np.float32)
+    fut = svc.submit("s", q, P_A)
+    assert fut.cancel() and fut.cancelled()
+    svc.drain()
+    with pytest.raises(Cancelled):
+        fut.result()
+    st = svc.stats()
+    assert st["cancelled"] == 1 and st.get("batches", 0) == 0
+    assert not fut.cancel()                         # second cancel loses
+    # resolution is single-shot: a late set_result cannot clobber
+    fut.set_result(object())
+    with pytest.raises(Cancelled):
+        fut.result()
+
+
+def test_default_deadline_from_opts(rng):
+    svc, _ = _svc(rng, deadline_s=1.0)
+    fut = svc.submit("s", rng.random((4, 3)).astype(np.float32), P_A,
+                     now=0.0)
+    svc.drain(now=10.0)
+    assert isinstance(fut.exception(), DeadlineExceeded)
+
+
+# -------------------------------------------------------- bounded retries
+
+
+def test_transient_launch_failure_retried_to_success(rng):
+    """A launch fault with budget 1 fails exactly once; the bounded retry
+    re-dispatches and the request still resolves bitwise-exact."""
+    svc, pts = _svc(rng, retries=2, backoff_s=1e-4)
+    q = rng.random((12, 3)).astype(np.float32)
+    with faults.scoped(FaultPlan(launch=1.0, budgets={"launch": 1})):
+        fut = svc.submit("s", q, P_A)
+        svc.drain()
+    _assert_bitwise(fut.result(), api.query(api.build_index(pts, P_A), q))
+    st = svc.stats()
+    assert st["retries"] == 1
+    assert st.get("failed_batches", 0) == 0
+    assert fut.quality is not None and fut.quality.oob == 0
+
+
+def test_retry_budget_exhausted_fails_fast(rng):
+    svc, _ = _svc(rng, retries=1, backoff_s=1e-4)
+    with faults.scoped(FaultPlan(launch=1.0)):      # every dispatch fails
+        fut = svc.submit("s", rng.random((6, 3)).astype(np.float32), P_A)
+        svc.drain()
+    assert isinstance(fut.exception(), InjectedFault)
+    st = svc.stats()
+    assert st["retries"] == 1 and st["failed_batches"] == 1
+
+
+# -------------------------------------------------------- circuit breaker
+
+
+def test_breaker_unit_state_machine():
+    br = CircuitBreaker(threshold=2, cooldown_s=10.0)
+    assert br.state == "closed" and br.allow(0.0)
+    assert not br.record_failure(0.0)               # 1 of 2
+    assert br.record_failure(0.0)                   # trips
+    assert br.state == "open"
+    assert not br.allow(5.0) and not br.submit_allowed(5.0)
+    assert br.retry_after(5.0) == pytest.approx(5.0)
+    assert br.allow(10.5)                           # half-open probe
+    assert br.state == "half_open"
+    assert not br.allow(10.5)                       # one probe at a time
+    br.record_failure(10.5)                         # probe fails: reopen,
+    assert br.state == "open"                       # cooldown doubled
+    assert not br.allow(25.0) and br.allow(31.0)
+    br.record_success()                             # probe succeeds
+    assert br.state == "closed" and br.allow(31.0)
+    assert br.trips == 2 and br.probes == 2
+
+
+def test_breaker_isolates_poisoned_scene_and_recovers(rng):
+    """The acceptance scenario: one tenant's scene is poisoned (every
+    launch faults); its breaker opens and it fails fast, while the healthy
+    tenant keeps draining the whole time; after the fault clears a
+    half-open probe closes the breaker and the scene serves again."""
+    pts0 = rng.random((500, 3)).astype(np.float32)
+    pts1 = rng.random((400, 3)).astype(np.float32)
+    svc = NeighborService(ServeOpts(retries=0, breaker_n=2,
+                                    breaker_cooldown_s=10.0))
+    svc.register_scene("s0", pts0)
+    svc.register_scene("s1", pts1)
+    q = rng.random((8, 3)).astype(np.float32)
+    ref1 = api.query(api.build_index(pts1, P_A), q)
+
+    with faults.scoped(FaultPlan(launch=1.0, scene="s0")):
+        for _ in range(2):                          # 2 failures -> trips
+            bad = svc.submit("s0", q, P_A, now=0.0)
+            good = svc.submit("s1", q, P_A, now=0.0)
+            svc.drain(now=0.0)
+            assert isinstance(bad.exception(), InjectedFault)
+            _assert_bitwise(good.result(), ref1)    # healthy scene drains
+        assert svc.breaker_state("s0") == "open"
+        assert svc.stats()["breaker_trips"] == 1
+
+        # open: submissions fail fast with a retry-after hint; the
+        # healthy tenant is untouched
+        with pytest.raises(CircuitOpen) as ei:
+            svc.submit("s0", q, P_A, now=1.0)
+        assert ei.value.retry_after_s > 0
+        good = svc.submit("s1", q, P_A, now=1.0)
+        svc.drain(now=1.0)
+        _assert_bitwise(good.result(), ref1)
+
+        # past cooldown: the half-open probe still faults -> reopens with
+        # a doubled cooldown
+        probe = svc.submit("s0", q, P_A, now=11.0)
+        svc.drain(now=11.0)
+        assert isinstance(probe.exception(), InjectedFault)
+        assert svc.breaker_state("s0") == "open"
+        with pytest.raises(CircuitOpen):
+            svc.submit("s0", q, P_A, now=12.0)      # doubled cooldown
+
+    # fault cleared: the next probe succeeds and the breaker closes
+    probe = svc.submit("s0", q, P_A, now=32.0)
+    svc.drain(now=32.0)
+    _assert_bitwise(probe.result(),
+                    api.query(api.build_index(pts0, P_A), q))
+    assert svc.breaker_state("s0") == "closed"
+
+
+def test_breaker_open_fails_queued_batch_at_drain(rng):
+    """Requests admitted before the breaker opened fail fast with
+    CircuitOpen at drain — not silently dropped, not launched."""
+    svc, _ = _svc(rng, retries=0, breaker_n=1, breaker_cooldown_s=100.0)
+    q = rng.random((4, 3)).astype(np.float32)
+    with faults.scoped(FaultPlan(launch=1.0, scene="s")):
+        bad = svc.submit("s", q, P_A, now=0.0)      # will trip the breaker
+        queued = svc.submit("s", q, P_B, now=0.0)   # behind it, own bucket
+        svc.drain(now=0.0)
+    assert isinstance(bad.exception(), InjectedFault)
+    assert svc.breaker_state("s") == "open"
+    assert isinstance(queued.exception(), CircuitOpen)
+    assert svc.stats()["circuit_open"] >= 1
+
+
+# ------------------------------------------------------ pump containment
+
+
+def test_sync_failure_fails_futures_not_hangs(rng, monkeypatch):
+    """A non-transient failure surfacing at sync time fails the batch's
+    futures — no future is stranded."""
+    svc, _ = _svc(rng)
+    fut = svc.submit("s", rng.random((4, 3)).astype(np.float32), P_A)
+
+    def boom(flight, now_fn=time.monotonic):
+        raise RuntimeError("device lost")
+
+    monkeypatch.setattr(svc, "_finish", boom)
+    svc.drain()
+    assert isinstance(fut.exception(), RuntimeError)
+    assert svc.stats()["failed_batches"] == 1
+
+
+def test_pump_crash_fails_taken_requests(rng, monkeypatch):
+    """An exception escaping the drain loop itself (not a batch failure)
+    still fails every taken request before propagating."""
+    svc, _ = _svc(rng)
+    fut = svc.submit("s", rng.random((4, 3)).astype(np.float32), P_A)
+    monkeypatch.setattr(
+        svc, "_run_batch",
+        lambda *a, **kw: (_ for _ in ()).throw(MemoryError("oom")))
+    with pytest.raises(MemoryError):
+        svc.drain()
+    assert isinstance(fut.exception(), MemoryError)
+    assert svc.stats()["pump_crashes"] == 1
+
+
+def test_background_pump_survives_crash(rng):
+    """A crash inside the background pump restarts the loop (counted as
+    serve.pump_restarts) instead of killing the thread and hanging every
+    later future."""
+    svc, _ = _svc(rng, max_wait_s=0.005)
+    orig = svc._batcher.take
+    state = {"crashed": False}
+
+    def flaky_take(*args, **kwargs):
+        if not state["crashed"] and not svc._batcher.empty():
+            state["crashed"] = True
+            raise RuntimeError("transient scheduler bug")
+        return orig(*args, **kwargs)
+
+    svc._batcher.take = flaky_take
+    svc.start(poll_s=0.002)
+    try:
+        fut = svc.submit("s", rng.random((6, 3)).astype(np.float32), P_A)
+        res = fut.result(timeout=30.0)              # crash did not strand it
+        assert np.asarray(res.indices).shape == (6, P_A.k)
+    finally:
+        svc.stop()
+    assert state["crashed"]
+    st = svc.stats()
+    assert st["pump_restarts"] >= 1 and st["pump_crashes"] >= 1
+
+
+# ------------------------------------------------- stragglers (satellite 6)
+
+
+def test_straggler_monitor_wired_into_pump(rng):
+    """Injected stragglers are flagged by the shared StragglerMonitor
+    (serve.stragglers counter + EMA gauge), and the drain completes."""
+    svc, _ = _svc(rng)
+    q = rng.random((16, 3)).astype(np.float32)
+    svc.registry.get("s").variant(P_A).warm(16)     # compile out of the EMA
+    for _ in range(4):                              # healthy EMA baseline
+        svc.submit("s", q, P_A)
+        svc.drain()
+    with faults.scoped(FaultPlan(straggler=1.0, delay_s=0.25)):
+        fut = svc.submit("s", q, P_A)
+        svc.drain()
+    assert fut.done() and fut.exception() is None
+    st = svc.stats()
+    assert st["stragglers"] >= 1
+    assert svc._straggler.ema is not None
+
+
+# --------------------------------------------------- graceful degradation
+
+
+def test_overload_degrades_with_quality_flag(rng):
+    """Past the high-water mark with degrade on, a request is admitted at
+    the reduced ladder level and its response is flagged degraded — while
+    a request past the hard cap is still Rejected."""
+    svc, pts = _svc(rng, max_pending=50, degrade=True, degrade_hard=2.0)
+    q1 = rng.random((40, 3)).astype(np.float32)
+    q2 = rng.random((40, 3)).astype(np.float32)
+    f1 = svc.submit("s", q1, P_A)                   # normal admission
+    f2 = svc.submit("s", q2, P_A)                   # 80 > 50: degraded
+    with pytest.raises(Rejected):                   # 120 > 100: hard cap
+        svc.submit("s", q1, P_A)
+    assert svc.stats()["degraded_admissions"] == 1
+    svc.drain()
+
+    assert f1.quality is not None and not f1.quality.reduced_ladder
+    assert f2.quality.degraded and f2.quality.reduced_ladder
+    assert svc.stats()["degraded_responses"] == 1
+    _assert_bitwise(f1.result(), api.query(api.build_index(pts, P_A), q1))
+    # the degraded response is exactly what the reduced-ladder program
+    # serves: bounded-window approximate, not garbage
+    ref_deg = api.query(
+        api.build_index(pts, P_A, SearchOpts(w_ladder=(1,))), q2)
+    _assert_bitwise(f2.result(), ref_deg)
+
+
+def test_result_quality_from_counters():
+    assert ResultQuality.from_counters().exact
+    rq = ResultQuality.from_counters(overflow=3, oob=1, reduced_ladder=True)
+    assert rq.degraded and not rq.exact
+    assert rq.overflow == 3 and rq.oob == 1 and rq.reduced_ladder
+    assert "overflow" in rq.reason and "ladder" in rq.reason
+
+
+def test_session_quality_counters_reach_responses(rng):
+    """A session-backed scene's overflow/oob telemetry (already host-side
+    from the packed step) lands on the response quality flags."""
+    pts = rng.random((400, 3)).astype(np.float32)
+    sess = SimulationSession(pts, P_A)
+    sess.step(pts)
+    svc = NeighborService()
+    svc.register_session("sim", sess)
+    fut = svc.submit("sim", rng.random((8, 3)).astype(np.float32), P_A)
+    svc.drain()
+    assert fut.quality is not None
+    assert fut.quality.overflow == sess.report.overflow
+    assert fut.quality.oob == sess.report.oob
+
+
+# ------------------------------------- session step x drain (satellite 3)
+
+
+def test_session_step_and_drain_interleave_bitwise(rng):
+    """100 interleaved (step, submit, drain) iterations against the same
+    registered dynamic scene: every drained result is bitwise-identical
+    to api.query against the session's current frame, and nothing
+    deadlocks."""
+    pts = rng.random((300, 3)).astype(np.float32)
+    sess = SimulationSession(pts, P_A)
+    sess.step(pts)
+    svc = NeighborService()
+    svc.register_session("sim", sess)
+    cur = pts
+    for t in range(100):
+        cur = np.clip(cur + rng.normal(0, 0.001, cur.shape),
+                      0, 1).astype(np.float32)
+        sess.step(cur)
+        q = rng.random((8, 3)).astype(np.float32)
+        fut = svc.submit("sim", q, P_A)
+        svc.drain()
+        _assert_bitwise(fut.result(timeout=30.0),
+                        api.query(sess.index, q))
+    assert svc.queue_depth() == 0
+
+
+def test_session_step_concurrent_with_background_pump(rng):
+    """Stepping the session from one thread while the background pump
+    drains submissions from another neither deadlocks nor strands a
+    future; a final quiesced drain still serves the current frame."""
+    pts = rng.random((300, 3)).astype(np.float32)
+    sess = SimulationSession(pts, P_A)
+    sess.step(pts)
+    svc = NeighborService(ServeOpts(max_wait_s=0.002))
+    svc.register_session("sim", sess)
+    stop = threading.Event()
+    steps = {"n": 0}
+
+    def stepper():
+        cur = pts
+        srng = np.random.default_rng(42)
+        while not stop.is_set() and steps["n"] < 100:
+            cur = np.clip(cur + srng.normal(0, 0.001, cur.shape),
+                          0, 1).astype(np.float32)
+            sess.step(cur)
+            steps["n"] += 1
+
+    th = threading.Thread(target=stepper)
+    svc.start(poll_s=0.001)
+    th.start()
+    try:
+        futs = [svc.submit("sim", rng.random((6, 3)).astype(np.float32),
+                           P_A) for _ in range(30)]
+        for f in futs:
+            f.result(timeout=60.0)                  # nothing hangs
+    finally:
+        stop.set()
+        th.join(timeout=60.0)
+        svc.stop()
+    assert not th.is_alive() and steps["n"] > 0
+    q = rng.random((8, 3)).astype(np.float32)
+    fut = svc.submit("sim", q, P_A)
+    svc.drain()
+    _assert_bitwise(fut.result(), api.query(sess.index, q))
+
+
+# ------------------------------------------------------- the chaos gate
+
+
+def test_chaos_trace_zero_hung_futures(rng):
+    """Acceptance: under a seeded FaultPlan (20% launch failures, 10%
+    stragglers, 5% poisoned queries) a multi-tenant trace completes with
+    every request resolved as exactly one taxonomy outcome, zero hung
+    futures, and bitwise parity on every non-degraded success."""
+    scenes = {"s0": rng.random((500, 3)).astype(np.float32),
+              "s1": rng.random((400, 3)).astype(np.float32)}
+    svc = NeighborService(ServeOpts(retries=2, backoff_s=1e-4,
+                                    breaker_n=3, max_pending=100_000))
+    for sid, pts in scenes.items():
+        svc.register_scene(sid, pts)
+    plan = FaultPlan(launch=0.2, straggler=0.1, poison=0.05, seed=7,
+                     delay_s=0.002)
+
+    submitted = []                                  # (sid, params, q, fut)
+    outcomes = {"submit_error": 0}
+    with faults.scoped(plan):
+        now = 0.0
+        for i in range(60):
+            now += 0.001
+            sid = ("s0", "s1")[i % 2]
+            params = (P_A, P_B)[(i // 2) % 2]
+            q = rng.random((int(rng.integers(4, 24)), 3)) \
+                .astype(np.float32)
+            try:
+                submitted.append(
+                    (sid, params, q, svc.submit(sid, q, params, now=now)))
+            except (QueryError, Rejected, CircuitOpen) as exc:
+                outcomes[type(exc).__name__] = \
+                    outcomes.get(type(exc).__name__, 0) + 1
+            if i % 8 == 7:
+                svc.pump(now=now, force=True)
+        svc.drain(now=now)
+
+    refs = {}
+    hung = 0
+    for sid, params, q, fut in submitted:
+        try:
+            res = fut.result(timeout=30.0)
+        except TimeoutError:
+            hung += 1
+            continue
+        except (DeadlineExceeded, QueryError, CircuitOpen,
+                InjectedFault) as exc:
+            outcomes[type(exc).__name__] = \
+                outcomes.get(type(exc).__name__, 0) + 1
+            continue
+        outcomes["result"] = outcomes.get("result", 0) + 1
+        if not fut.quality.reduced_ladder:           # non-degraded: parity
+            key = (sid, params)
+            if key not in refs:
+                refs[key] = api.build_index(scenes[sid], params)
+            _assert_bitwise(res, api.query(refs[key], q))
+
+    assert hung == 0                                 # NO future ever hangs
+    assert sum(outcomes.values()) - outcomes["submit_error"] == 60
+    assert outcomes.get("result", 0) >= 40           # most still served
+    fired = plan.stats()["fired"]
+    assert fired["launch"] > 0 and fired["poison"] > 0  # chaos was real
+    assert svc.queue_depth() == 0
+
+
+def test_no_faults_no_behavior_change(rng):
+    """With REPRO_FAULTS unset and clean inputs the serving path is
+    byte-for-byte the fault-free build: one host sync per batch, no
+    retries/failures/expiries, exact quality flags."""
+    svc, pts = _svc(rng)
+    q = rng.random((16, 3)).astype(np.float32)
+    futs = [svc.submit("s", q, P_A) for _ in range(5)]
+    svc.drain()
+    st = svc.stats()
+    assert st["host_syncs"] == st["batches"]
+    for key in ("retries", "failed_batches", "expired", "cancelled",
+                "query_errors", "circuit_open", "pump_crashes"):
+        assert st.get(key, 0) == 0, key
+    ref = api.query(api.build_index(pts, P_A), q)
+    for f in futs:
+        _assert_bitwise(f.result(), ref)
+        assert f.quality.exact and not f.quality.reduced_ladder
