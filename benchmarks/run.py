@@ -77,13 +77,19 @@ def main() -> None:
         print(f"# {key} done in {time.time() - t0:.1f}s")
         summary.extend(_summarize(key, results))
     _print_summary(summary)
-    # with REPRO_TRACE on, the unified telemetry registry (executor /
-    # session / sharded-session counters and latency percentiles collected
-    # while the figures ran) follows the ratio table
+    # the unified telemetry registry (executor / session / serve counters
+    # and latency percentiles collected while the figures ran) follows the
+    # ratio table — metrics record regardless of REPRO_TRACE, so the table
+    # prints unconditionally
     from repro import obs
-    if obs.trace_enabled():
+    from repro.obs import slo
+    print()
+    print(obs.summary())
+    # ... and the per-tenant SLO table whenever serve figures ran (the
+    # board has tenants exactly when a NeighborService resolved traffic)
+    if slo.BOARD.tenants():
         print()
-        print(obs.summary())
+        print(slo.summary())
 
 
 if __name__ == '__main__':

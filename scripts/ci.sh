@@ -56,9 +56,40 @@ REPRO_TRACE=1 python -m repro.launch.serve --smoke
 # seeded chaos smoke (DESIGN.md section 11): the same serve trace under
 # deterministic fault injection — 20% launch failures, 10% stragglers —
 # must account every request to one taxonomy outcome with ZERO hung
-# futures (the driver exits nonzero on any stranded future)
-REPRO_FAULTS=launch:0.2,straggler:0.1 \
+# futures (the driver exits nonzero on any stranded future). Flight
+# recording is on so the chaos path exercises the event ring too.
+REPRO_FLIGHT=1 REPRO_FLIGHT_PATH=/tmp/repro_flight_chaos.json \
+    REPRO_FAULTS=launch:0.2,straggler:0.1 \
     python -m repro.launch.serve --trace short
+
+# flight-recorder gate (DESIGN.md section 12): force scene0's breaker
+# open (launch faults scoped to scene0 at p=1.0 exhaust the retry budget
+# every batch) and require a parseable post-mortem dump with a
+# breaker_open reason — the breaker-trip path must produce evidence.
+# Every request still resolves (CircuitOpen is a taxonomy outcome), so
+# the driver itself exits 0; REPRO_SLO stays unset so the SLO gate is
+# not armed against the forced failures.
+REPRO_FLIGHT=1 REPRO_FLIGHT_PATH=/tmp/repro_flight_ci.json \
+    REPRO_FAULTS=launch:1.0,scene:scene0 \
+    python -m repro.launch.serve --trace short
+python - <<'PY'
+import json
+doc = json.load(open("/tmp/repro_flight_ci.json"))
+assert doc["schema"] == "repro.obs/flight-v1", doc["schema"]
+assert doc["reason"].startswith("breaker_open"), doc["reason"]
+assert doc["events"], "flight dump has no events"
+assert any(e["kind"] == "breaker_trip" for e in doc["events"]), \
+    "no breaker_trip event in flight dump"
+assert doc["metrics"]["metrics"], "flight dump has no metrics"
+print("ci.sh: flight-recorder dump OK "
+      f"({len(doc['events'])} events, reason {doc['reason']!r})")
+PY
+
+# obs_top smoke: the live dashboard renders frames over a real serving
+# workload and the OpenMetrics scrape path runs end to end
+python -m repro.launch.obs_top --demo --frames 2 --interval 0.5
+python -m repro.launch.obs_top --openmetrics > /tmp/repro_openmetrics.txt
+tail -1 /tmp/repro_openmetrics.txt | grep -q "# EOF"
 
 # smoke the dynamic-scene session path: the SPH example on the session
 # (and its legacy A/B flag), so the SimulationSession path cannot

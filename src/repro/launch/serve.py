@@ -29,6 +29,14 @@ future hangs (fails to resolve within the timeout) or goes unaccounted.
 ``--trace short|full`` selects a canned trace size (short == the CI chaos
 smoke); ``--deadline-ms`` arms per-request server-side deadlines on the
 simulated arrival clock.
+
+**Per-tenant SLOs** (DESIGN.md section 12): the driver always prints the
+per-tenant outcome table from ``repro.obs.slo`` (every terminal outcome
+is attributed by the service), and with a target armed — ``--slo
+'latency_ms:250,objective:0.9'`` or the ``REPRO_SLO`` knob — it exits
+nonzero if any tenant's attainment on the seeded trace is below its
+objective. Hung futures additionally dump the flight recorder
+(``REPRO_FLIGHT=1``) before the gate fails.
 """
 from __future__ import annotations
 
@@ -82,6 +90,11 @@ def main(argv=None):
     ap.add_argument("--deadline-ms", type=float, default=0.0,
                     help="per-request server-side deadline on the simulated "
                          "arrival clock (0 = none)")
+    ap.add_argument("--slo", default=None, metavar="SPEC",
+                    help="arm a per-tenant SLO target (e.g. "
+                         "'latency_ms:250,objective:0.9'); the gate exits "
+                         "nonzero if any tenant's attainment falls below "
+                         "its objective (default: the REPRO_SLO knob)")
     ap.add_argument("--scenes", type=int, default=3)
     ap.add_argument("--signatures", type=int, default=2,
                     help="distinct (radius, K) request signatures in the mix")
@@ -108,9 +121,13 @@ def main(argv=None):
         args.requests, args.qmax = 64, 32
 
     from repro import obs
+    from repro.obs import flight, slo
     from repro.reliability import faults
     from repro.serve import (CircuitOpen, NeighborService, QueryError,
                              Rejected, ServeOpts)
+
+    if args.slo:
+        slo.configure(slo.SLOTarget.parse(args.slo))
 
     opts = ServeOpts(
         max_batch=args.max_batch,
@@ -146,16 +163,16 @@ def main(argv=None):
     for dt, sid, params, q in trace:
         now += dt
         try:
-            futures.append(svc.submit(
+            futures.append((sid, svc.submit(
                 sid, q, params, now=now,
-                deadline_s=args.deadline_ms / 1e3 or None))
+                deadline_s=args.deadline_ms / 1e3 or None)))
         except Rejected:
             rejected += 1
             svc.pump(now=now, force=True)
             try:
-                futures.append(svc.submit(
+                futures.append((sid, svc.submit(
                     sid, q, params, now=now,
-                    deadline_s=args.deadline_ms / 1e3 or None))
+                    deadline_s=args.deadline_ms / 1e3 or None)))
             except (Rejected, CircuitOpen, QueryError) as exc:
                 account(type(exc).__name__)
         except (CircuitOpen, QueryError) as exc:
@@ -168,10 +185,13 @@ def main(argv=None):
     # a TimeoutError here means a request was stranded, the one failure
     # mode the reliability layer promises cannot happen
     hung = 0
-    for f in futures:
+    for _sid, f in futures:
         try:
             f.result(timeout=60.0)
-            account("result")
+            if f.quality is not None and f.quality.reduced_ladder:
+                account("degraded")
+            else:
+                account("result")
         except TimeoutError:
             hung += 1
             account("HUNG")
@@ -203,13 +223,28 @@ def main(argv=None):
               f", retries={st.get('retries', 0)}"
               f" stragglers={st.get('stragglers', 0)}"
               f" expired={st.get('expired', 0)}")
+    # per-tenant outcome breakdown: every terminal outcome the service
+    # attributed (ok/degraded/expired/rejected/circuit_open/error),
+    # attainment and burn rate per tenant
+    print(slo.summary())
     if obs.trace_enabled():
         print(obs.summary())
-    if hung or accounted != len(trace):
+    if hung:
+        # a hung future is THE reliability failure mode — capture the
+        # post-mortem before the gate fails (no-op unless REPRO_FLIGHT=1)
+        dumped = flight.dump("hung_futures")
+        if dumped:
+            print(f"serve: flight recorder dumped to {dumped}",
+                  file=sys.stderr)
+    fail = hung or accounted != len(trace)
+    if fail:
         print(f"serve: FAILED — hung futures: {hung}, accounted "
               f"{accounted}/{len(trace)}", file=sys.stderr)
-        return 1
-    return 0
+    viol = slo.violations()
+    for tenant, (att, obj) in sorted(viol.items()):
+        print(f"serve: SLO VIOLATION — tenant {tenant} attainment "
+              f"{att:.3f} < objective {obj:.3f}", file=sys.stderr)
+    return 1 if (fail or viol) else 0
 
 
 if __name__ == "__main__":

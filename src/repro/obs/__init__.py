@@ -1,5 +1,7 @@
 """repro.obs — unified telemetry: metrics registry, span tracing,
-device-resident counters (DESIGN.md section 9).
+device-resident counters (DESIGN.md section 9), and the request-scoped
+layer (section 12): trace context, per-tenant SLOs, flight recorder,
+Perfetto/OpenMetrics exporters.
 
 Quickstart::
 
@@ -9,14 +11,20 @@ Quickstart::
     ... run queries / session steps ...
     print(obs.summary())               # unified text table
     obs.export_jsonl("telemetry.jsonl")  # spans + metrics, one JSON/line
+    obs.export_perfetto("trace.json")  # open in ui.perfetto.dev
+    print(obs.export_openmetrics())    # Prometheus-style scrape text
 """
 from .registry import (REGISTRY, Counter, Gauge, Histogram,  # noqa: F401
                        MetricSet, Registry)
-from .tracing import (configure, export_jsonl, recent_spans,  # noqa: F401
-                      record_span, span, trace_enabled, trace_mode,
-                      trace_path)
+from .tracing import (configure, current_trace, export_jsonl,  # noqa: F401
+                      recent_spans, record_span, span, timeline,
+                      trace_enabled, trace_mode, trace_path, trace_scope)
 from .device import (TELEM_HEADER, level_occupancy,  # noqa: F401
                      pack_step_telemetry, unpack_step_telemetry)
+from .lifecycle import on_reset, run_reset_hooks  # noqa: F401
+from .perfetto import export_perfetto, to_trace_events  # noqa: F401
+from .openmetrics import export_openmetrics  # noqa: F401
+from . import slo, flight  # noqa: F401  (registers their reset hooks)
 
 
 def metric_set(component: str) -> MetricSet:
@@ -36,7 +44,10 @@ def metrics_dict() -> dict:
 
 
 def reset() -> None:
-    """Clear the global registry and the span ring buffer (tests)."""
+    """Clear the global registry, the span ring buffer, and every
+    component-local state registered via :func:`on_reset` (SLO windows,
+    flight ring) — so back-to-back test scenarios start clean."""
     from . import tracing
     REGISTRY.reset()
     tracing.reset()
+    run_reset_hooks()

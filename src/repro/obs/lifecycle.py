@@ -1,0 +1,41 @@
+"""Reset-safety registration hook (DESIGN.md section 12).
+
+``repro.obs.reset()`` clears the metrics registry and the span ring —
+but observability components introduced on top of them (the per-tenant
+SLO board, the flight-recorder ring, any future windowed state) own
+state the core reset cannot see. Instead of ``reset()`` growing an
+import of every such module, components register their own reset
+callable here at import time::
+
+    from .lifecycle import on_reset
+    on_reset(BOARD.reset)
+
+``obs.reset()`` then runs every registered hook after clearing the core
+state, so two back-to-back test scenarios always start from clean
+counters (the regression tests/test_obs_serve.py pins).
+"""
+from __future__ import annotations
+
+import threading
+
+_lock = threading.Lock()
+_HOOKS: list = []
+
+
+def on_reset(fn) -> None:
+    """Register ``fn()`` to run on every ``repro.obs.reset()``.
+    Idempotent: registering the same callable twice keeps one entry."""
+    with _lock:
+        if fn not in _HOOKS:
+            _HOOKS.append(fn)
+
+
+def run_reset_hooks() -> int:
+    """Run every registered hook (called by ``obs.reset``); returns the
+    hook count. A hook that raises propagates — a reset that silently
+    half-works is worse than a loud test failure."""
+    with _lock:
+        hooks = list(_HOOKS)
+    for fn in hooks:
+        fn()
+    return len(hooks)

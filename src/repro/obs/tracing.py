@@ -15,8 +15,22 @@ profiles. Host-side *recording* is gated by the ``REPRO_TRACE`` env knob
 
 Span taxonomy (fixed, so dashboards and tests can rely on the names):
 top-level ``query`` (executor) and ``step`` (sessions); children ``plan``,
-``compile``, ``launch``, ``sync``. Nesting is tracked per-thread; a span
-record carries its slash-joined path (``step/launch/compile``).
+``compile``, ``launch``, ``sync``. The serving stack (DESIGN.md section
+12) adds the request lifecycle: ``admit``/``admit/enqueue`` on the
+submit path and ``drain``/``stage``/``launch``/``sync``/``split``/
+``resolve`` on the drain path. Nesting is tracked per-thread; a span
+record carries its slash-joined path (``step/launch/compile``), its
+start time ``t0_s`` (``time.perf_counter`` clock — the clock the
+Perfetto exporter converts to microseconds), and the recording thread's
+``tid``.
+
+**Trace context** (section 12): ``with trace_scope("req-000042"): ...``
+pins a per-thread request id; every span recorded inside the scope (or
+given an explicit ``trace=...`` attribute) carries it as the top-level
+``trace`` field, and batch-granular spans carry the ``trace_ids`` list
+attribute instead. ``timeline(trace_id)`` filters the ring down to one
+request's spans in start-time order — the per-request reconstruction
+``export_jsonl`` consumers and ``obs/perfetto.py`` build on.
 
 Crucially, nothing here touches what gets *traced by JAX*: device
 programs are identical with tracing on or off (asserted by
@@ -113,6 +127,48 @@ def _stack() -> list:
     return st
 
 
+def _trace_stack() -> list:
+    st = getattr(_tls, "trace", None)
+    if st is None:
+        st = _tls.trace = []
+    return st
+
+
+def current_trace() -> str | None:
+    """The innermost trace id pinned on this thread (None outside any
+    ``trace_scope``)."""
+    st = _trace_stack()
+    return st[-1] if st else None
+
+
+class trace_scope:
+    """``with trace_scope("req-000042"): ...`` — every span recorded on
+    this thread inside the block carries ``trace: "req-000042"``."""
+
+    __slots__ = ("trace_id",)
+
+    def __init__(self, trace_id: str):
+        self.trace_id = trace_id
+
+    def __enter__(self):
+        _trace_stack().append(self.trace_id)
+        return self.trace_id
+
+    def __exit__(self, *exc):
+        st = _trace_stack()
+        if st and st[-1] == self.trace_id:
+            st.pop()
+        return False
+
+
+def _clean_attr(v):
+    if isinstance(v, (int, float, str, bool, type(None))):
+        return v
+    if isinstance(v, (list, tuple)):
+        return [_clean_attr(x) for x in v]
+    return str(v)
+
+
 def _emit(rec: dict) -> None:
     global _fh, _seq
     with _state_lock:
@@ -127,17 +183,27 @@ def _emit(rec: dict) -> None:
         logger.debug("span %s %.1fus", rec["path"], rec["dur_s"] * 1e6)
 
 
-def record_span(name: str, dur_s: float, **attrs) -> None:
+def record_span(name: str, dur_s: float, *, t0_s: float | None = None,
+                **attrs) -> None:
     """Record a span retroactively (for stages detected after the fact,
     e.g. a compile identified from a jit cache-size delta after the launch
-    call returned). Nested under the current thread's open span, if any."""
+    call returned). Nested under the current thread's open span, if any.
+    ``t0_s`` is the start on the ``perf_counter`` clock (defaults to
+    now-minus-duration); a ``trace=...`` attribute (or an enclosing
+    ``trace_scope``) is hoisted to the record's top-level ``trace``."""
     if _mode == "off":
         return
     st = _stack()
     path = "/".join(st + [name])
-    rec = {"type": "span", "name": name, "path": path, "dur_s": dur_s}
+    trace = attrs.pop("trace", None) or current_trace()
+    rec = {"type": "span", "name": name, "path": path, "dur_s": dur_s,
+           "t0_s": (time.perf_counter() - dur_s if t0_s is None
+                    else float(t0_s)),
+           "tid": threading.get_ident()}
+    if trace is not None:
+        rec["trace"] = trace
     if attrs:
-        rec["attrs"] = attrs
+        rec["attrs"] = {k: _clean_attr(v) for k, v in attrs.items()}
     _emit(rec)
 
 
@@ -178,15 +244,37 @@ class span:
         if st and st[-1] == self.name:
             st.pop()
         if _mode != "off":
+            trace = self.attrs.pop("trace", None) or current_trace()
             rec = {"type": "span", "name": self.name, "path": self._path,
-                   "dur_s": self.duration}
+                   "dur_s": self.duration, "t0_s": self._t0,
+                   "tid": threading.get_ident()}
+            if trace is not None:
+                rec["trace"] = trace
             if self.attrs:
-                rec["attrs"] = {k: (v if isinstance(v, (int, float, str,
-                                                        bool, type(None)))
-                                    else str(v))
+                rec["attrs"] = {k: _clean_attr(v)
                                 for k, v in self.attrs.items()}
             _emit(rec)
         return False
+
+
+def timeline(trace_id: str, spans: list | None = None) -> list:
+    """One request's spans in start-time order: every span whose
+    top-level ``trace`` matches, plus batch-granular spans whose
+    ``trace_ids`` attribute contains the id. The per-request
+    reconstruction the serving acceptance test asserts covers
+    admission through resolution."""
+    out = []
+    for rec in (recent_spans() if spans is None else spans):
+        if rec.get("type", "span") != "span":
+            continue
+        if rec.get("trace") == trace_id:
+            out.append(rec)
+        else:
+            ids = (rec.get("attrs") or {}).get("trace_ids")
+            if ids and trace_id in ids:
+                out.append(rec)
+    out.sort(key=lambda r: (r.get("t0_s", 0.0), r.get("seq", 0)))
+    return out
 
 
 def export_jsonl(path: str | None = None, registry=None) -> str:

@@ -48,7 +48,14 @@ class Request:
     (DESIGN.md section 11). ``degraded`` marks requests admitted under
     the overload ladder cap (``ServeOpts.degrade``): they serve at a
     reduced window and their responses carry a degraded
-    ``ResultQuality`` flag."""
+    ``ResultQuality`` flag.
+
+    ``trace_id`` is the request-scoped trace context (DESIGN.md section
+    12): a process-unique ``req-NNNNNN`` id assigned at admission that
+    every span touching this request carries — per-request spans as the
+    top-level ``trace`` field, batch-granular spans in a ``trace_ids``
+    attribute — so ``obs.timeline(trace_id)`` reconstructs the request's
+    full admission-to-resolution story."""
 
     seq: int
     scene_id: object
@@ -60,6 +67,7 @@ class Request:
     t_real: float
     deadline: float | None = None
     degraded: bool = False
+    trace_id: str = ""
 
     @property
     def nq(self) -> int:

@@ -56,6 +56,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import itertools
 import os
 import threading
 import time
@@ -64,6 +65,8 @@ import jax
 import numpy as np
 
 from .. import obs
+from ..obs import flight as flightrec
+from ..obs import slo
 from ..core import api
 from ..core.types import SearchOpts, SearchParams, SearchResult
 from ..reliability import faults
@@ -75,6 +78,11 @@ from ..train.fault_tolerance import StragglerMonitor
 from .batcher import BatchReport, MicroBatcher, Request, split_result, \
     stage_batch
 from .registry import SceneRegistry
+
+
+# request-scoped trace ids (DESIGN.md section 12): process-unique across
+# service instances, so merged span streams never collide
+_REQ_IDS = itertools.count(1)
 
 
 def _env_int(name: str, default: int) -> int:
@@ -213,14 +221,17 @@ class ServeFuture:
     as ``serve.expired``), instead of leaking staged device work.
 
     ``quality`` carries the :class:`~repro.reliability.ResultQuality`
-    flags of a successful resolution (None until resolved / on error).
+    flags of a successful resolution (None until resolved / on error);
+    ``trace_id`` the request-scoped trace context assigned at admission
+    (``obs.timeline(fut.trace_id)`` is the request's span timeline).
     """
 
     __slots__ = ("_event", "_result", "_exc", "_cancelled", "_lock",
-                 "request_id", "quality")
+                 "request_id", "quality", "trace_id")
 
-    def __init__(self, request_id: int):
+    def __init__(self, request_id: int, trace_id: str = ""):
         self.request_id = request_id
+        self.trace_id = trace_id
         self._event = threading.Event()
         self._result: SearchResult | None = None
         self._exc: BaseException | None = None
@@ -246,20 +257,25 @@ class ServeFuture:
             return True
 
     def set_result(self, result: SearchResult,
-                   quality: ResultQuality | None = None) -> None:
+                   quality: ResultQuality | None = None) -> bool:
+        """First resolution wins; returns whether this call resolved the
+        future (so attribution — SLO, resolve spans — counts each
+        request exactly once)."""
         with self._lock:
             if self._event.is_set():
-                return
+                return False
             self._result = result
             self.quality = quality
             self._event.set()
+            return True
 
-    def set_exception(self, exc: BaseException) -> None:
+    def set_exception(self, exc: BaseException) -> bool:
         with self._lock:
             if self._event.is_set():
-                return
+                return False
             self._exc = exc
             self._event.set()
+            return True
 
     def exception(self) -> BaseException | None:
         return self._exc if self._event.is_set() else None
@@ -375,7 +391,41 @@ class NeighborService:
         the admission timestamp (simulated-clock trace drivers);
         ``deadline_s`` the per-request server-side deadline (default
         ``ServeOpts.deadline_s``; 0/None = none).
+
+        Every call is traced: the request gets a process-unique
+        ``trace_id`` (on the returned future), the admission is recorded
+        as an ``admit`` span carrying it, and refused admissions are
+        attributed to the tenant's SLO ledger (``rejected`` /
+        ``circuit_open``; ``QueryError`` counts as ``error``, and —
+        being a reliability failure path — triggers a flight-recorder
+        dump when ``REPRO_FLIGHT`` is on).
         """
+        trace_id = f"req-{next(_REQ_IDS):06d}"
+        with obs.span("admit", trace=trace_id,
+                      tenant=str(scene_id)) as sp:
+            try:
+                return self._admit(scene_id, queries, params, opts,
+                                   now=now, deadline_s=deadline_s,
+                                   trace_id=trace_id, sp=sp)
+            except QueryError:
+                sp.set(outcome="error")
+                slo.record(scene_id, "error")
+                flightrec.note("query_error", scene=str(scene_id),
+                               trace=trace_id)
+                flightrec.dump(f"query_error:{scene_id}")
+                raise
+            except Rejected:
+                sp.set(outcome="rejected")
+                slo.record(scene_id, "rejected")
+                raise
+            except CircuitOpen:
+                sp.set(outcome="circuit_open")
+                slo.record(scene_id, "circuit_open")
+                raise
+
+    def _admit(self, scene_id, queries, params: SearchParams,
+               opts: SearchOpts, *, now, deadline_s, trace_id,
+               sp) -> ServeFuture:
         q = np.asarray(queries, np.float32)
         if q.ndim != 2 or q.shape[1] != 3:
             raise ValueError(f"queries must be [nq, 3], got {q.shape}")
@@ -417,13 +467,15 @@ class NeighborService:
             ddl = self.opts.deadline_s if deadline_s is None \
                 else float(deadline_s)
             self._seq += 1
-            fut = ServeFuture(self._seq)
+            fut = ServeFuture(self._seq, trace_id)
             req = Request(seq=self._seq, scene_id=scene_id, params=params,
                           opts=opts, queries=q, future=fut,
                           t_submit=t_sched, t_real=t_real,
                           deadline=(t_sched + ddl if ddl else None),
-                          degraded=degraded)
-            self._batcher.add(req)
+                          degraded=degraded, trace_id=trace_id)
+            sp.set(seq=self._seq, nq=q.shape[0], degraded=degraded)
+            with obs.span("enqueue", trace=trace_id, nq=q.shape[0]):
+                self._batcher.add(req)
             self._metrics.count("requests")
             self._metrics.count("query_rows", q.shape[0])
             self._gauge_depth()
@@ -446,16 +498,34 @@ class NeighborService:
             if r.future.done():                  # caller-cancelled
                 self._metrics.count("cancelled")
             elif r.expired(now):
-                r.future.set_exception(
-                    DeadlineExceeded(r.seq, r.deadline, now))
-                self._metrics.count("expired")
+                if r.future.set_exception(
+                        DeadlineExceeded(r.seq, r.deadline, now)):
+                    self._metrics.count("expired")
+                    self._resolve_span(r, "expired")
+                    slo.record(r.scene_id, "expired")
             else:
                 live.append(r)
         return live
 
-    def _fail_requests(self, requests, exc: BaseException) -> None:
+    def _resolve_span(self, req, outcome: str, attempt: int = 0) -> None:
+        """Record the request's terminal ``resolve`` span: its duration
+        is the request's end-to-end latency, so on the timeline it
+        stretches back to (approximately) the admission — the covering
+        interval the per-request reconstruction leans on."""
+        obs.record_span("resolve", max(0.0, time.monotonic() - req.t_real),
+                        trace=req.trace_id, tenant=str(req.scene_id),
+                        seq=req.seq, outcome=outcome, attempt=attempt,
+                        degraded=req.degraded)
+
+    def _fail_requests(self, requests, exc: BaseException,
+                       attempt: int = 0) -> None:
+        outcome = ("circuit_open" if isinstance(exc, CircuitOpen)
+                   else "expired" if isinstance(exc, DeadlineExceeded)
+                   else "error")
         for r in requests:
-            r.future.set_exception(exc)
+            if r.future.set_exception(exc):
+                self._resolve_span(r, outcome, attempt)
+                slo.record(r.scene_id, outcome)
 
     def _backoff(self, attempt: int) -> None:
         base = self.opts.backoff_s * (2.0 ** attempt)
@@ -466,20 +536,25 @@ class NeighborService:
         """Stage (host concat/pad/upload) and asynchronously dispatch one
         batch through the scene variant's compiled serve program."""
         scene_id, params, sopts = key
+        tids = [r.trace_id for r in requests]
         variant = self.registry.resolve(scene_id, params, sopts)
         # fault-injection seam: a scheduled launch fault fails the batch
         # before any device work (retried by _run_batch)
         faults.maybe_fail("launch", scene=scene_id)
-        staged = stage_batch(key, requests,
-                             variant.pad_to_bucket(
-                                 sum(r.nq for r in requests)))
+        with obs.span("stage", trace_ids=tids, scene=str(scene_id)):
+            staged = stage_batch(key, requests,
+                                 variant.pad_to_bucket(
+                                     sum(r.nq for r in requests)))
         cache0 = variant.compiled_programs()
         t0 = time.perf_counter()
-        result = variant.fn(variant.index, staged.queries)
+        with obs.span("launch", trace_ids=tids, scene=str(scene_id),
+                      nq=staged.nq, pad_n=staged.pad_n, attempt=attempt):
+            result = variant.fn(variant.index, staged.queries)
         compiled = variant.compiled_programs() > cache0
         if compiled:
             variant.warmed.add(staged.pad_n)
-            obs.record_span("compile", time.perf_counter() - t0)
+            obs.record_span("compile", time.perf_counter() - t0,
+                            trace_ids=tids)
         return _InFlight(key, staged, result, t0, compiled, attempt)
 
     def _run_batch(self, key, requests, now: float) -> _InFlight | None:
@@ -507,21 +582,36 @@ class NeighborService:
                 if is_transient(exc) and attempt < self.opts.retries:
                     attempt += 1
                     self._metrics.count("retries")
+                    flightrec.note("retry", scene=str(scene_id),
+                                   attempt=attempt, error=str(exc))
                     self._backoff(attempt - 1)
                     continue
-                self._fail_requests(requests, exc)
+                self._fail_requests(requests, exc, attempt)
                 self._metrics.count("failed_batches")
                 self._metrics.count("launch_failures")
+                flightrec.note("batch_failed", scene=str(scene_id),
+                               error=str(exc), attempt=attempt,
+                               seqs=[r.seq for r in requests])
                 if self._breaker(scene_id).record_failure(now):
                     self._metrics.count("breaker_trips")
+                    self._trip_breaker(scene_id)
                 return None
+
+    def _trip_breaker(self, scene_id) -> None:
+        """A scene's circuit just opened — the canonical flight-recorder
+        moment: note the transition and dump the post-mortem (a no-op
+        unless ``REPRO_FLIGHT`` is on)."""
+        flightrec.note("breaker_trip", scene=str(scene_id),
+                       state=self.breaker_state(scene_id))
+        flightrec.dump(f"breaker_open:{scene_id}")
 
     def _finish(self, flight: _InFlight, now_fn=time.monotonic) -> None:
         """The drained batch's ONE blocking host sync, then future
         resolution (device-sliced views — no further transfer)."""
         res = flight.result
+        tids = [r.trace_id for r in flight.staged.requests]
         faults.maybe_delay(scene=flight.key[0])   # injected straggler
-        with obs.span("sync"):
+        with obs.span("sync", trace_ids=tids, scene=str(flight.key[0])):
             jax.block_until_ready((res.indices, res.distances2, res.counts))
         self._metrics.count("host_syncs")
         self._metrics.count("batches")
@@ -545,14 +635,27 @@ class NeighborService:
         except KeyError:               # evicted mid-flight; results stand
             overflow, oob = 0, 0
         now = now_fn()
-        for req, res_i in zip(staged.requests, split_result(staged, res)):
+        with obs.span("split", trace_ids=tids,
+                      requests=len(staged.requests)):
+            parts = split_result(staged, res)
+        occupancy = staged.nq / staged.pad_n
+        for req, res_i in zip(staged.requests, parts):
             quality = ResultQuality.from_counters(
                 overflow=overflow, oob=oob, reduced_ladder=req.degraded)
             if quality.degraded:
                 self._metrics.count("degraded_responses")
-            req.future.set_result(res_i, quality)
+            if req.future.set_result(res_i, quality):
+                outcome = "degraded" if req.degraded else "ok"
+                self._resolve_span(req, outcome, flight.attempt)
+                slo.record(req.scene_id, outcome,
+                           max(0.0, now - req.t_real),
+                           occupancy=occupancy)
             self._metrics.observe("request_s", max(0.0, now - req.t_real))
         self._metrics.count("resolved", len(staged.requests))
+        flightrec.note("drain", scene=str(scene_id), nq=staged.nq,
+                       pad_n=staged.pad_n, requests=len(staged.requests),
+                       batch_s=dt, compiled=flight.compiled,
+                       attempt=flight.attempt)
 
     def _finish_safe(self, flight: _InFlight, now: float) -> None:
         """Sync one in-flight batch, converting failures surfacing at
@@ -565,6 +668,9 @@ class NeighborService:
         except Exception as exc:
             if is_transient(exc) and flight.attempt < self.opts.retries:
                 self._metrics.count("retries")
+                flightrec.note("retry", scene=str(scene_id),
+                               attempt=flight.attempt + 1, at="sync",
+                               error=str(exc))
                 self._backoff(flight.attempt)
                 retry = self._run_batch(flight.key, flight.staged.requests,
                                         now)
@@ -572,10 +678,13 @@ class NeighborService:
                     retry.attempt = max(retry.attempt, flight.attempt + 1)
                     self._finish_safe(retry, now)
                 return
-            self._fail_requests(flight.staged.requests, exc)
+            self._fail_requests(flight.staged.requests, exc, flight.attempt)
             self._metrics.count("failed_batches")
+            flightrec.note("batch_failed", scene=str(scene_id), at="sync",
+                           error=str(exc), attempt=flight.attempt)
             if self._breaker(scene_id).record_failure(now):
                 self._metrics.count("breaker_trips")
+                self._trip_breaker(scene_id)
             return
         self._breaker(scene_id).record_success()
 
@@ -624,8 +733,10 @@ class NeighborService:
                                                 len(requests))
                             current = []
                             continue
-                        with obs.span("launch", scene=str(scene_id),
-                                      requests=len(requests)):
+                        with obs.span("drain", scene=str(scene_id),
+                                      requests=len(requests),
+                                      trace_ids=[r.trace_id
+                                                 for r in requests]):
                             flight = self._run_batch(key, requests, now)
                         current = []
                         if flight is None:
@@ -646,11 +757,15 @@ class NeighborService:
                         self._finish_safe(inflight.popleft(), now)
             except BaseException as exc:
                 # crash containment: no future may hang on a pump crash
-                for r in current:
-                    r.future.set_exception(exc)
+                self._fail_requests(current, exc)
                 for fl in inflight:
                     self._fail_requests(fl.staged.requests, exc)
                 self._metrics.count("pump_crashes")
+                flightrec.note("pump_crash", error=str(exc),
+                               stranded=len(current) + sum(
+                                   len(fl.staged.requests)
+                                   for fl in inflight))
+                flightrec.dump("pump_crash")
                 raise
             finally:
                 self._gauge_depth()

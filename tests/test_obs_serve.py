@@ -1,0 +1,545 @@
+"""Request-scoped observability tests (DESIGN.md section 12).
+
+The contracts:
+
+1. **trace context** — ``trace_scope`` pins a per-thread request id,
+   spans carry it (top-level ``trace`` or batch-granular ``trace_ids``),
+   and ``obs.timeline(trace_id)`` reconstructs one request's spans in
+   start order;
+2. **per-request serve timeline** — a traced serve run yields, for every
+   future, a timeline from admission through resolution with no coverage
+   gaps (the ``resolve`` span's duration is the end-to-end latency, so it
+   stretches back over the whole request);
+3. **telemetry parity on the drain path** — spans + SLO + flight
+   recording on vs off leaves the drained results bitwise-identical, the
+   serve jaxpr unchanged, and the host-sync count equal (the
+   ``tests/test_obs.py`` parity guarantee extended to ``serve``);
+4. **SLO accounting** — declarative targets parse/validate, windowed
+   attainment and burn rate compute, and the service attributes every
+   terminal outcome (ok/degraded/expired/rejected/circuit_open/error) to
+   its tenant;
+5. **flight recorder** — breaker trips and pump crashes dump a parseable
+   post-mortem JSON with events, spans, metrics, and the SLO snapshot;
+6. **exporters** — ``export_openmetrics()`` conforms to the OpenMetrics
+   text grammar; ``export_perfetto()`` emits valid Chrome trace_event
+   JSON;
+7. **reset safety** — ``obs.reset()`` runs the lifecycle hooks, so two
+   back-to-back serve scenarios see clean SLO/flight state.
+"""
+import json
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.api as api
+from repro import obs
+from repro.obs import flight, slo
+from repro.core import SearchParams, SimulationSession
+from repro.reliability import FaultPlan, faults
+from repro.serve import NeighborService, Rejected, ServeOpts
+
+P_A = SearchParams(radius=0.11, k=8, knn_window="exact")
+P_B = SearchParams(radius=0.15, k=4, knn_window="exact")
+
+SERVE_SPAN_NAMES = {"admit", "enqueue", "drain", "stage", "launch",
+                    "sync", "split", "resolve"}
+
+
+@pytest.fixture(autouse=True)
+def clean_obs():
+    obs.reset()
+    faults.configure(None)
+    yield
+    faults.configure(None)
+    obs.configure()
+    flight.configure()
+    slo.configure(from_env=True)
+    obs.reset()
+
+
+def _assert_bitwise(got, ref):
+    np.testing.assert_array_equal(np.asarray(got.indices),
+                                  np.asarray(ref.indices))
+    np.testing.assert_array_equal(np.asarray(got.counts),
+                                  np.asarray(ref.counts))
+    da = np.where(np.isinf(np.asarray(got.distances2)), -1.0,
+                  np.asarray(got.distances2))
+    db = np.where(np.isinf(np.asarray(ref.distances2)), -1.0,
+                  np.asarray(ref.distances2))
+    np.testing.assert_array_equal(da, db)
+
+
+# ------------------------------------------------------------ trace context
+
+
+def test_trace_scope_pins_and_unpins():
+    obs.configure(mode="log")
+    assert obs.current_trace() is None
+    with obs.trace_scope("req-a"):
+        assert obs.current_trace() == "req-a"
+        with obs.span("inner"):
+            pass
+        with obs.trace_scope("req-b"):
+            assert obs.current_trace() == "req-b"
+        assert obs.current_trace() == "req-a"
+    assert obs.current_trace() is None
+    rec = obs.recent_spans()[-1]
+    assert rec["name"] == "inner" and rec["trace"] == "req-a"
+    assert "t0_s" in rec and "tid" in rec
+
+
+def test_explicit_trace_attr_overrides_scope():
+    obs.configure(mode="log")
+    with obs.trace_scope("scoped"):
+        obs.record_span("a", 0.001, trace="explicit")
+        with obs.span("b", trace="explicit2"):
+            pass
+    recs = {r["name"]: r for r in obs.recent_spans()}
+    assert recs["a"]["trace"] == "explicit"
+    assert recs["b"]["trace"] == "explicit2"
+    # the trace attr is hoisted out of attrs, not duplicated
+    assert "trace" not in (recs["a"].get("attrs") or {})
+
+
+def test_timeline_matches_trace_and_trace_ids():
+    obs.configure(mode="log")
+    obs.record_span("admit", 0.001, t0_s=1.0, trace="req-1")
+    obs.record_span("admit", 0.001, t0_s=1.5, trace="req-2")
+    obs.record_span("drain", 0.002, t0_s=2.0,
+                    trace_ids=["req-1", "req-2"])
+    obs.record_span("resolve", 0.001, t0_s=3.0, trace="req-1")
+    tl = obs.timeline("req-1")
+    assert [r["name"] for r in tl] == ["admit", "drain", "resolve"]
+    assert [r["t0_s"] for r in tl] == [1.0, 2.0, 3.0]
+    assert [r["name"] for r in obs.timeline("req-2")] == ["admit", "drain"]
+    assert obs.timeline("req-none") == []
+
+
+# ------------------------------------------- per-request serve timeline
+
+
+def test_serve_request_timeline_covers_admission_to_resolution(rng):
+    """Acceptance: a traced serve run reconstructs, per future, a
+    timeline running admission -> resolution whose span intervals form
+    ONE contiguous covered range — no gaps."""
+    obs.configure(mode="log")
+    svc = NeighborService(ServeOpts(max_batch=512))
+    svc.register_scene("s0", rng.random((900, 3)).astype(np.float32))
+    futs = [svc.submit("s0", rng.random((16, 3)).astype(np.float32), P_A)
+            for _ in range(4)]
+    svc.drain()
+    for f in futs:
+        f.result(timeout=30)
+        assert f.trace_id.startswith("req-")
+        tl = obs.timeline(f.trace_id)
+        names = [r["name"] for r in tl]
+        assert names[0] == "admit"
+        assert SERVE_SPAN_NAMES <= set(names)
+        # coverage: sorted by start, every span begins before the union
+        # of the previous spans ends (=> a single contiguous interval
+        # from admission to resolution, i.e. zero gaps)
+        covered_to = tl[0]["t0_s"]
+        for r in tl:
+            assert r["t0_s"] <= covered_to + 1e-6, \
+                f"timeline gap before {r['name']}"
+            covered_to = max(covered_to, r["t0_s"] + r["dur_s"])
+        resolve = next(r for r in tl if r["name"] == "resolve")
+        assert resolve["attrs"]["outcome"] == "ok"
+        assert resolve["attrs"]["tenant"] == "s0"
+        # the resolve span IS the end-to-end latency interval: it starts
+        # back at admission and the covered union reaches its end
+        assert resolve["t0_s"] <= tl[0]["t0_s"] + 1e-3
+        assert covered_to >= resolve["t0_s"] + resolve["dur_s"] - 1e-9
+    # distinct requests got distinct ids
+    assert len({f.trace_id for f in futs}) == len(futs)
+
+
+def test_live_session_serve_traced_parity_and_sync_attribution(rng):
+    """Serving a live SimulationSession while it steps (the ROADMAP
+    interleaving item), traced: every drained result is bitwise-equal to
+    a quiesced ``api.query`` of the current frame, serving adds NO
+    session-side host sync (one per step, exactly as unserved), and the
+    spans attribute the work correctly — ``step`` spans carry no request
+    trace id, while the request timeline runs admit -> resolve."""
+    obs.configure(mode="log")
+    pts = rng.random((400, 3)).astype(np.float32)
+    sess = SimulationSession(pts, P_A)
+    sess.step(pts)
+    base_syncs = sess.stats()["host_syncs"]
+
+    svc = NeighborService()
+    svc.register_session("sim", sess)
+    cur = pts
+    n_steps = 4
+    futs = []
+    for _ in range(n_steps):
+        cur = np.clip(cur + rng.normal(0, 0.001, cur.shape),
+                      0, 1).astype(np.float32)
+        sess.step(cur)
+        q = rng.random((10, 3)).astype(np.float32)
+        fut = svc.submit("sim", q, P_A)
+        svc.drain()
+        _assert_bitwise(fut.result(timeout=30),
+                        api.query(sess.index, q))   # quiesced reference
+        futs.append(fut)
+
+    st = sess.stats()
+    # serving added zero session-side syncs: one per step, none per query
+    assert st["host_syncs"] == base_syncs + n_steps
+    assert st["stats_fetches"] == 0
+    # the serve side keeps its own one-sync-per-batch contract
+    sst = svc.stats()
+    assert sst["host_syncs"] == sst["batches"]
+
+    spans = obs.recent_spans()
+    step_spans = [r for r in spans if r["name"] == "step"]
+    assert len(step_spans) >= n_steps
+    # the step's wait is attributed to the step, never smeared onto a
+    # request: no step span carries a request trace id
+    for r in step_spans:
+        assert "trace" not in r
+        assert "trace_ids" not in (r.get("attrs") or {})
+    for fut in futs:
+        names = [r["name"] for r in obs.timeline(fut.trace_id)]
+        assert names[0] == "admit" and "resolve" in names
+        assert "step" not in names
+
+
+# ------------------------------------- parity: full telemetry on vs off
+
+
+def _run_seeded_trace(seed, n=16):
+    rng = np.random.default_rng(seed)
+    scenes = {f"s{i}": rng.random((700 + 100 * i, 3)).astype(np.float32)
+              for i in range(2)}
+    svc = NeighborService(ServeOpts(max_batch=256, max_pending=100_000))
+    for sid, pts in scenes.items():
+        svc.register_scene(sid, pts)
+    futs = []
+    for _ in range(n):
+        sid = f"s{int(rng.integers(2))}"
+        p = (P_A, P_B)[int(rng.integers(2))]
+        q = rng.random((int(rng.integers(4, 40)), 3)).astype(np.float32)
+        futs.append(svc.submit(sid, q, p))
+    reports = svc.drain()
+    results = [f.result(timeout=30) for f in futs]
+    return results, reports, svc.stats()
+
+
+def test_serve_drain_identical_with_full_telemetry_on_vs_off(rng):
+    """Spans + SLO target + flight recording on vs everything off: same
+    bitwise results, same batch reports, same host-sync count."""
+    def run(telemetry):
+        obs.reset()
+        if telemetry:
+            obs.configure(mode="log")
+            slo.configure(slo.SLOTarget(latency_s=60.0, objective=0.99))
+            flight.configure(enabled=True, path="/dev/null")
+        else:
+            obs.configure(mode="off")
+            slo.configure(None)
+            flight.configure(enabled=False)
+        return _run_seeded_trace(123)
+
+    res_off, rep_off, st_off = run(False)
+    res_on, rep_on, st_on = run(True)
+    assert rep_off == rep_on                     # identical drain order
+    assert st_off["host_syncs"] == st_on["host_syncs"]
+    assert st_off["batches"] == st_on["batches"]
+    for a, b in zip(res_off, res_on):
+        _assert_bitwise(a, b)
+    # the on-run actually recorded: spans exist and tenants attributed
+    assert any(r["name"] == "resolve" for r in obs.recent_spans())
+    assert slo.BOARD.tenants() == ["s0", "s1"]
+
+
+def test_serve_variant_jaxpr_identical_telemetry_on_off(rng):
+    """The drain path's device program is a constant function of the
+    telemetry knobs (the test_obs.py jaxpr guarantee, extended to the
+    serve variant program)."""
+    pts = rng.random((800, 3)).astype(np.float32)
+    qs = jnp.asarray(rng.random((64, 3)).astype(np.float32))
+    svc = NeighborService()
+    svc.register_scene("s0", pts)
+    variant = svc.registry.get("s0").variant(P_A)
+    obs.configure(mode="off")
+    slo.configure(None)
+    flight.configure(enabled=False)
+    jaxpr_off = str(jax.make_jaxpr(variant.fn)(variant.index, qs))
+    obs.configure(mode="log")
+    slo.configure(slo.SLOTarget())
+    flight.configure(enabled=True, path="/dev/null")
+    jaxpr_on = str(jax.make_jaxpr(variant.fn)(variant.index, qs))
+    assert jaxpr_off == jaxpr_on
+
+
+# ------------------------------------------------------------------- SLO
+
+
+def test_slo_target_parse_and_validate():
+    t = slo.SLOTarget.parse("latency_ms:250,objective:0.99,window_s:300")
+    assert t.latency_s == pytest.approx(0.25)
+    assert t.objective == 0.99 and t.window_s == 300.0
+    assert t.error_budget() == pytest.approx(0.01)
+    rt = slo.SLOTarget.parse(t.spec())           # spec round-trips
+    assert rt.latency_s == t.latency_s and rt.objective == t.objective
+    with pytest.raises(ValueError):
+        slo.SLOTarget.parse("bogus:1")
+    with pytest.raises(ValueError):
+        slo.SLOTarget.parse("latency_ms")
+    with pytest.raises(ValueError):
+        slo.SLOTarget(objective=0.0)
+    with pytest.raises(ValueError):
+        slo.SLOTarget(latency_s=-1.0)
+
+
+def test_slo_windowed_attainment_and_burn():
+    board = slo.SLOBoard()
+    board.configure(slo.SLOTarget(latency_s=0.1, objective=0.9,
+                                  window_s=10.0))
+    # 8 good + 2 bad inside the window, 5 bad outside it
+    for i in range(5):
+        board.record("t", "error", now=0.0)
+    for i in range(8):
+        board.record("t", "ok", 0.01, now=100.0)
+    board.record("t", "expired", now=100.0)
+    board.record("t", "ok", 5.0, now=100.0)      # over threshold -> bad
+    att = board.attainment("t", now=105.0)
+    assert att == pytest.approx(8 / 10)
+    # burn = bad_frac / error_budget = 0.2 / 0.1
+    assert board.burn_rate("t", now=105.0) == pytest.approx(2.0)
+    assert board.violations(now=105.0) == {"t": (att, 0.9)}
+    assert board.attainment("idle") == 1.0 and board.burn_rate("idle") == 0
+    snap = board.snapshot(now=105.0)["t"]
+    assert snap["requests"] == 15
+    assert snap["outcomes"]["error"] == 5 and snap["outcomes"]["ok"] == 9
+
+
+def test_slo_per_tenant_target_overrides_default():
+    board = slo.SLOBoard()
+    board.configure(slo.SLOTarget(latency_s=1.0, objective=0.5))
+    board.set_target("strict", slo.SLOTarget(latency_s=0.001,
+                                             objective=0.999))
+    board.record("strict", "ok", 0.5, now=0.0)   # misses strict latency
+    board.record("lax", "ok", 0.5, now=0.0)      # meets default latency
+    assert board.attainment("strict", now=1.0) == 0.0
+    assert board.attainment("lax", now=1.0) == 1.0
+
+
+def test_service_attributes_every_terminal_outcome(rng):
+    """ok, degraded, expired, rejected, and circuit_open all land in the
+    tenant's ledger."""
+    pts = rng.random((500, 3)).astype(np.float32)
+    q = rng.random((8, 3)).astype(np.float32)
+
+    # ok
+    svc = NeighborService(ServeOpts(max_batch=256))
+    svc.register_scene("s0", pts)
+    svc.submit("s0", q, P_A)
+    svc.drain()
+    # expired: deadline already past at drain time
+    svc.submit("s0", q, P_A, now=0.0, deadline_s=0.5)
+    svc.drain(now=10.0)
+    # rejected: tiny high-water mark
+    tight = NeighborService(ServeOpts(max_pending=4))
+    tight.register_scene("s0", pts)
+    with pytest.raises(Rejected):
+        tight.submit("s0", rng.random((64, 3)).astype(np.float32), P_A)
+    # degraded: overload admission at the reduced ladder
+    soft = NeighborService(ServeOpts(max_pending=4, degrade=True,
+                                     degrade_hard=100.0, max_batch=256))
+    soft.register_scene("s0", pts)
+    soft.submit("s0", rng.random((64, 3)).astype(np.float32), P_A)
+    soft.drain()
+    # error + circuit_open: a permanently failing scene errors its first
+    # batch (tripping the breaker at threshold 1), then fails fast at
+    # admission with CircuitOpen
+    from repro.serve import CircuitOpen
+    broken = NeighborService(ServeOpts(retries=0, breaker_n=1))
+    broken.register_scene("s0", pts)
+    with faults.scoped(FaultPlan(launch=1.0, scene="s0")):
+        f = broken.submit("s0", q, P_A)
+        broken.drain()
+        with pytest.raises(Exception):
+            f.result()
+        with pytest.raises(CircuitOpen):
+            broken.submit("s0", q, P_A)
+
+    oc = slo.snapshot()["s0"]["outcomes"]
+    assert oc["ok"] >= 1
+    assert oc["degraded"] >= 1
+    assert oc["expired"] >= 1
+    assert oc["rejected"] >= 1
+    assert oc["error"] >= 1                      # the injected launch fault
+    assert oc["circuit_open"] >= 1
+
+
+# -------------------------------------------------------- flight recorder
+
+
+def test_flight_dump_on_breaker_trip(rng, tmp_path):
+    out = str(tmp_path / "flight.json")
+    flight.configure(enabled=True, path=out)
+    obs.configure(mode="log")
+    svc = NeighborService(ServeOpts(retries=0, breaker_n=1))
+    svc.register_scene("bad", rng.random((400, 3)).astype(np.float32))
+    with faults.scoped(FaultPlan(launch=1.0, scene="bad")):
+        fut = svc.submit("bad", rng.random((8, 3)).astype(np.float32),
+                         P_A)
+        svc.drain()
+    with pytest.raises(Exception):
+        fut.result()
+    assert flight.dump_count() == 1
+    doc = json.loads(open(out).read())
+    assert doc["schema"] == "repro.obs/flight-v1"
+    assert doc["reason"] == "breaker_open:bad"
+    kinds = [e["kind"] for e in doc["events"]]
+    assert "breaker_trip" in kinds and "batch_failed" in kinds
+    assert doc["metrics"]["metrics"]             # registry included
+    assert "bad" in doc["slo"]                   # SLO snapshot included
+    assert any(s["name"] == "admit" for s in doc["spans"])
+
+
+def test_flight_dump_on_pump_crash(rng, tmp_path, monkeypatch):
+    out = str(tmp_path / "crash.json")
+    flight.configure(enabled=True, path=out)
+    svc = NeighborService()
+    svc.register_scene("s0", rng.random((400, 3)).astype(np.float32))
+    fut = svc.submit("s0", rng.random((8, 3)).astype(np.float32), P_A)
+
+    def boom(*a, **k):
+        raise RuntimeError("pump meltdown")
+
+    # crash the drain loop AFTER the batch was taken off the queue, the
+    # stranding hazard the containment clause exists for
+    monkeypatch.setattr(svc, "_drop_dead", boom)
+    with pytest.raises(RuntimeError, match="pump meltdown"):
+        svc.pump(force=True)
+    assert fut.done()                            # crash containment held
+    doc = json.loads(open(out).read())
+    assert doc["reason"] == "pump_crash"
+    assert any(e["kind"] == "pump_crash" for e in doc["events"])
+
+
+def test_flight_disabled_records_but_does_not_dump(tmp_path):
+    flight.configure(enabled=False, path=str(tmp_path / "no.json"))
+    flight.note("drain", batch=1)
+    assert flight.dump("anything") is None
+    assert not (tmp_path / "no.json").exists()
+    assert [e["kind"] for e in flight.events()] == ["drain"]
+    # an explicit path forces a dump even when disabled (debug surface)
+    forced = str(tmp_path / "forced.json")
+    assert flight.dump("debug", path=forced) == forced
+    assert json.loads(open(forced).read())["reason"] == "debug"
+
+
+# -------------------------------------------------------------- exporters
+
+# OpenMetrics text grammar (the subset we emit): comment/TYPE lines,
+# sample lines `name{labels} value`, terminated by `# EOF`.
+_OM_TYPE = re.compile(r"^# TYPE [a-zA-Z_][a-zA-Z0-9_]* "
+                      r"(counter|gauge|summary)$")
+_OM_SAMPLE = re.compile(
+    r"^[a-zA-Z_][a-zA-Z0-9_]*"
+    r"(\{[a-zA-Z_][a-zA-Z0-9_]*=\"[^\"]*\""
+    r"(,[a-zA-Z_][a-zA-Z0-9_]*=\"[^\"]*\")*\})?"
+    r" (-?\d+(\.\d+)?([eE][+-]?\d+)?|[+-]Inf|NaN)$")
+
+
+def test_openmetrics_grammar_and_content(rng):
+    ms = obs.metric_set("serve")
+    ms.count("requests", 5)
+    ms.gauge("queue_depth", 3)
+    for v in (0.01, 0.02, 0.03):
+        ms.observe("request_s", v)
+    slo.record("tenant-a", "ok", 0.01)
+    slo.record("tenant-a", "rejected")
+    text = obs.export_openmetrics()
+    lines = text.splitlines()
+    assert lines[-1] == "# EOF" and text.endswith("\n")
+    declared = set()
+    for ln in lines[:-1]:
+        if ln.startswith("# TYPE"):
+            assert _OM_TYPE.match(ln), ln
+            declared.add(ln.split()[2])
+        else:
+            assert _OM_SAMPLE.match(ln), ln
+            fam = ln.split("{")[0].split(" ")[0]
+            base = re.sub(r"_(total|sum|count)$", "", fam)
+            # every sample's family was TYPE-declared first
+            assert fam in declared or base in declared, ln
+    # counters expose _total, histograms quantiles + _sum/_count
+    assert "repro_serve_requests_total 5" in text
+    assert "repro_serve_queue_depth 3" in text
+    assert 'repro_serve_request_s{quantile="0.99"}' in text
+    assert "repro_serve_request_s_count 3" in text
+    assert 'repro_slo_attainment{tenant="tenant-a"} 0.5' in text
+    assert ('repro_slo_outcomes_total{tenant="tenant-a",'
+            'outcome="rejected"} 1') in text
+
+
+def test_perfetto_export_trace_events(rng, tmp_path):
+    obs.configure(mode="log")
+    with obs.trace_scope("req-9"):
+        with obs.span("admit", tenant="s0"):
+            pass
+    obs.record_span("drain", 0.002, trace_ids=["req-9"])
+    out = str(tmp_path / "trace.json")
+    assert obs.export_perfetto(out) == out
+    doc = json.loads(open(out).read())
+    events = doc["traceEvents"]
+    assert len(events) == 2
+    assert [e["ts"] for e in events] == sorted(e["ts"] for e in events)
+    admit = next(e for e in events if e["name"] == "admit")
+    assert admit["ph"] == "X" and admit["cat"] == "repro"
+    assert admit["dur"] >= 0 and isinstance(admit["pid"], int)
+    assert admit["args"]["trace"] == "req-9"
+    assert admit["args"]["tenant"] == "s0"
+    drain = next(e for e in events if e["name"] == "drain")
+    assert drain["args"]["trace_ids"] == ["req-9"]
+
+
+# ------------------------------------------------------------ reset safety
+
+
+def test_reset_runs_registered_hooks():
+    calls = []
+
+    def hook():
+        calls.append(1)
+
+    obs.on_reset(hook)
+    obs.reset()
+    assert calls == [1]
+    obs.on_reset(hook)                           # idempotent registration
+    obs.reset()
+    assert calls == [1, 1]                       # once per reset, not twice
+
+
+def test_back_to_back_serve_scenarios_see_clean_counters(rng):
+    """The regression the satellite pins: two identical serve scenarios
+    separated by ``obs.reset()`` observe identical (not cumulative)
+    per-tenant SLO counts and flight events."""
+    def scenario():
+        svc = NeighborService()
+        svc.register_scene("s0",
+                           rng.random((500, 3)).astype(np.float32))
+        futs = [svc.submit("s0",
+                           rng.random((8, 3)).astype(np.float32), P_A)
+                for _ in range(3)]
+        svc.drain()
+        for f in futs:
+            f.result(timeout=30)
+        return (slo.snapshot()["s0"]["outcomes"],
+                [e["kind"] for e in flight.events()])
+
+    first_slo, first_events = scenario()
+    assert first_slo["ok"] == 3 and "drain" in first_events
+    obs.reset()
+    assert slo.BOARD.tenants() == [] and flight.events() == []
+    second_slo, second_events = scenario()
+    assert second_slo == first_slo               # clean, not cumulative
+    assert second_events == first_events
